@@ -1,0 +1,48 @@
+"""Paper Figs. 8-10 (+16-18) and Fig. 12: naive AL over delta vs MCAL.
+
+For each dataset: sweep AL batch size delta in [1%, 20%], record total
+cost (Fig. 8-10) and machine-labeled fraction (Fig. 12); MCAL must beat
+the best (oracle) delta.  Also reports the delta-sensitivity claims:
+cost varies multiple-x across delta while the machine-labeled fraction
+falls as delta grows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core import AMAZON, MCALConfig, make_emulated_task, run_mcal
+from repro.core.baselines import run_naive_al
+
+DELTAS = (0.01, 0.033, 0.067, 0.10, 0.167, 0.20)
+
+
+def run():
+    rows = []
+    for ds in ("fashion", "cifar10", "cifar100"):
+        al = {}
+        us_total = 0.0
+        for d in DELTAS:
+            task = make_emulated_task(ds, "resnet18", seed=0)
+            res, us = timed(run_naive_al, task, AMAZON, d)
+            us_total += us
+            al[d] = res
+        best = min(al, key=lambda d: al[d].cost)
+        worst = max(al, key=lambda d: al[d].cost)
+        task = make_emulated_task(ds, "resnet18", seed=0)
+        mcal = run_mcal(task, AMAZON, MCALConfig(seed=0))
+        rows.append(Row(
+            f"fig8_10_{ds}_oracle_al", us_total / len(DELTAS),
+            f"best_delta={best};al=${al[best].cost:.0f};"
+            f"worst=${al[worst].cost:.0f};mcal=${mcal.total_cost:.0f};"
+            f"mcal_wins={mcal.total_cost < al[best].cost}"))
+        rows.append(Row(
+            f"fig12_{ds}_machine_frac", us_total / len(DELTAS),
+            f"d1%={al[0.01].machine_fraction:.2f};"
+            f"d20%={al[0.20].machine_fraction:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,27 @@
+"""Paper §5.1 (ImageNet/EfficientNet-B0): on a dataset too hard/expensive
+to machine-label, MCAL must bail out to human-labeling everything after a
+bounded exploration tax (x = 10% of the human-labeling cost)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import AMAZON, MCALConfig, make_emulated_task, run_mcal
+
+
+def run():
+    task = make_emulated_task("imagenet", "efficientnet-b0", seed=0)
+    res, us = timed(run_mcal, task, AMAZON, MCALConfig(seed=0))
+    human_all = task.pool_size * AMAZON.price_per_label
+    tax = res.ledger["training"]
+    return [
+        Row("imagenet_bailout", us,
+            f"decision={res.decision};tax=${tax:.0f};"
+            f"tax_frac={tax / human_all:.3f};"
+            f"explored_B={res.B_size};err={res.measured_error:.4f}"),
+        Row("imagenet_bailout_bounded", 0.0,
+            f"{res.decision == 'human_all' and tax <= 0.15 * human_all}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

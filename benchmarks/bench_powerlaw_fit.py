@@ -1,0 +1,62 @@
+"""Paper Fig. 2 + Fig. 3 + Appendix F: truncated vs plain power-law fits.
+
+Generates noisy error curves from known truncated power laws (one per
+(dataset x model) calibration), fits both families on k-point prefixes and
+reports extrapolation error at large |B| — the truncated family must
+dominate, and the fit must improve monotonically with more points.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core.emulator import CALIBRATIONS
+from repro.core.powerlaw import PowerLaw, fit_power_law
+
+
+def _curve(alpha, gamma, k, sizes, noise, rng):
+    law = PowerLaw(alpha=alpha, gamma=gamma, k=k)
+    return law.predict(sizes) * np.exp(rng.normal(0, noise, len(sizes)))
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    sizes = np.asarray([500, 1000, 2000, 4000, 8000, 16000, 24000, 32000])
+    target_B = 40_000
+
+    # Fig. 2: truncated vs plain extrapolation quality
+    rel_t, rel_p, t_us = [], [], 0.0
+    for (ds, arch), (a, g, k, q, cu) in CALIBRATIONS.items():
+        true = PowerLaw(alpha=a, gamma=g, k=k)
+        errs = _curve(a, g, k, sizes, 0.05, rng)
+        fit_t, us = timed(fit_power_law, sizes, errs, truncated=True)
+        t_us += us
+        fit_p = fit_power_law(sizes, errs, truncated=False)
+        tgt = float(true.predict(target_B))
+        rel_t.append(abs(float(fit_t.predict(target_B)) - tgt) / tgt)
+        rel_p.append(abs(float(fit_p.predict(target_B)) - tgt) / tgt)
+    rows.append(Row("fig2_truncated_fit_relerr", t_us / len(CALIBRATIONS),
+                    f"{np.mean(rel_t):.3f}"))
+    rows.append(Row("fig2_plain_fit_relerr", t_us / len(CALIBRATIONS),
+                    f"{np.mean(rel_p):.3f}"))
+
+    # Fig. 3: error prediction improves with number of estimates
+    a, g, k, _, _ = CALIBRATIONS[("cifar10", "resnet18")]
+    true = PowerLaw(alpha=a, gamma=g, k=k)
+    tgt = float(true.predict(target_B))
+    for npts in (3, 5, 8):
+        rel = []
+        for s in range(16):
+            r2 = np.random.default_rng(s)
+            errs = _curve(a, g, k, sizes[:npts], 0.05, r2)
+            fit = fit_power_law(sizes[:npts], errs, truncated=npts >= 3)
+            rel.append(abs(float(fit.predict(target_B)) - tgt) / tgt)
+        rows.append(Row(f"fig3_fit_{npts}pts_relerr", t_us / len(CALIBRATIONS),
+                        f"{np.mean(rel):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,55 @@
+"""Paper Tbl. 1 + Fig. 7: MCAL total cost vs full human labeling, both
+services, with architecture selection (the "DNN Selected" column).
+
+Paper numbers (Amazon): fashion $400/86%, cifar10 $792/67%,
+cifar100 $1698/29%; Res18 selected everywhere.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core import (AMAZON, SATYAM, MCALConfig, make_emulated_task,
+                        run_mcal, select_architecture)
+from repro.core.emulator import DATASETS
+
+PAPER = {  # (service, dataset) -> (cost, savings)
+    ("amazon", "fashion"): (400, 0.86),
+    ("amazon", "cifar10"): (792, 0.67),
+    ("amazon", "cifar100"): (1698, 0.29),
+    ("satyam", "fashion"): (29, 0.86),
+    ("satyam", "cifar10"): (63, 0.65),
+    ("satyam", "cifar100"): (139, 0.23),
+}
+
+
+def run():
+    rows = []
+    for service in (AMAZON, SATYAM):
+        for ds in ("fashion", "cifar10", "cifar100"):
+            task = make_emulated_task(ds, "resnet18", seed=0)
+            res, us = timed(run_mcal, task, service, MCALConfig(seed=0))
+            full = DATASETS[ds]["full"] * service.price_per_label
+            save = 1 - res.total_cost / full
+            p_cost, p_save = PAPER[(service.name, ds)]
+            rows.append(Row(
+                f"tbl1_{service.name}_{ds}", us,
+                f"cost=${res.total_cost:.0f};save={save:.1%};"
+                f"err={res.measured_error:.3f};paper=${p_cost}/{p_save:.0%}"))
+
+    # arch selection (Fig. 7 bars / "DNN Selected")
+    for ds in ("fashion", "cifar10", "cifar100"):
+        tasks = {a: make_emulated_task(ds, a, seed=0)
+                 for a in ("cnn18", "resnet18", "resnet50")}
+        (winner, res, _), us = timed(
+            select_architecture, tasks, AMAZON, MCALConfig(seed=0))
+        rows.append(Row(
+            f"tbl1_archsel_{ds}", us,
+            f"winner={winner};cost=${res.total_cost:.0f};"
+            f"err={res.measured_error:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

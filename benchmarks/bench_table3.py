@@ -1,0 +1,32 @@
+"""Paper Tbl. 3 + §5.3: relaxing the accuracy requirement to eps = 10%.
+
+Savings must increase vs eps = 5% and the measured labeling accuracy must
+stay above 90% (paper reports 91.9% / 94.7% / 98.4%).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import AMAZON, MCALConfig, make_emulated_task, run_mcal
+from repro.core.emulator import DATASETS
+
+
+def run():
+    rows = []
+    for ds in ("fashion", "cifar10", "cifar100"):
+        full = DATASETS[ds]["full"] * AMAZON.price_per_label
+        res5 = run_mcal(make_emulated_task(ds, "resnet18", seed=0), AMAZON,
+                        MCALConfig(seed=0, eps_target=0.05))
+        res10, us = timed(run_mcal, make_emulated_task(ds, "resnet18", seed=0),
+                          AMAZON, MCALConfig(seed=0, eps_target=0.10))
+        rows.append(Row(
+            f"tbl3_{ds}_eps10", us,
+            f"save5={1 - res5.total_cost / full:.1%};"
+            f"save10={1 - res10.total_cost / full:.1%};"
+            f"acc10={1 - res10.measured_error:.3f};"
+            f"relaxing_helps={res10.total_cost <= res5.total_cost * 1.02}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: timing + CSV rows.
+
+Every benchmark module exposes ``run() -> list[Row]``; ``benchmarks.run``
+aggregates them into the ``name,us_per_call,derived`` CSV the harness
+expects (us_per_call times the benchmark's core computation; ``derived``
+carries the headline metric the paper table/figure reports).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

@@ -1,0 +1,64 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark aggregator — one module per paper table/figure:
+
+  bench_powerlaw_fit       Fig. 2 / Fig. 3 / Appendix F
+  bench_delta_sensitivity  Fig. 4
+  bench_selection          Fig. 5 / Fig. 6 / Fig. 11
+  bench_table1             Tbl. 1 / Fig. 7 (+ arch selection)
+  bench_al_sweep           Figs. 8-10 / Fig. 12
+  bench_al_gains           §5.2 / Figs. 14-15 (live AL vs random)
+  bench_table2             Tbl. 2 (oracle AL)
+  bench_subset_sweep       Fig. 13
+  bench_table3             Tbl. 3 (eps = 10%)
+  bench_imagenet_bailout   §5.1 ImageNet
+  bench_kernels            margin_head scoring structure
+
+Run all:  PYTHONPATH=src python -m benchmarks.run
+One:      PYTHONPATH=src python -m benchmarks.run --only table1
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = (
+    "bench_powerlaw_fit",
+    "bench_delta_sensitivity",
+    "bench_selection",
+    "bench_table1",
+    "bench_al_sweep",
+    "bench_al_gains",
+    "bench_table2",
+    "bench_subset_sweep",
+    "bench_table3",
+    "bench_imagenet_bailout",
+    "bench_kernels",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""End-to-end live labeling campaign — the paper's system, for real.
+
+    PYTHONPATH=src python examples/label_dataset.py
+
+Everything is live: a JAX MLP classifier is (re)trained by the framework's
+own train loop on every MCAL iteration, the pool is scored with the
+margin head, human labels are simulated as ground truth and charged to the
+ledger, and the final hybrid labeling is validated against the oracle.
+Takes a few minutes on CPU (dozens of real training runs).
+"""
+import numpy as np
+
+from repro.core import AMAZON, LiveTask, MCALConfig, run_mcal
+from repro.data.synth import make_classification
+
+POOL, CLASSES, DIM = 6_000, 10, 32
+
+print(f"generating a {POOL:,}-sample / {CLASSES}-class pool "
+      f"(25% hard tail) ...")
+x, y = make_classification(POOL, num_classes=CLASSES, dim=DIM,
+                           difficulty=0.3, hard_frac=0.25, seed=0)
+task = LiveTask(features=x, groundtruth=y, num_classes=CLASSES,
+                hidden=64, depth=2, epochs=30, c_u_nominal=2e-4, seed=0)
+
+print("running MCAL (real training per iteration) ...")
+result = run_mcal(task, AMAZON,
+                  MCALConfig(eps_target=0.05, delta0_frac=0.02,
+                             max_iters=25, seed=0))
+
+human_only = POOL * AMAZON.price_per_label
+print(f"\ndecision       : {result.decision}")
+print(f"trained on     : {result.B_size:,} human labels "
+      f"({result.B_size / POOL:.1%})")
+print(f"machine-labeled: {result.S_size:,} ({result.S_size / POOL:.1%}) "
+      f"at theta={result.theta_final:.2f}")
+print(f"measured error : {result.measured_error:.2%} (bound 5%)")
+print(f"cost           : ${result.total_cost:.2f} "
+      f"(human-only ${human_only:.0f}; "
+      f"{1 - result.total_cost / human_only:.1%} saved)")
+print(f"ledger         : {result.ledger}")
+assert result.measured_error <= 0.06, "error bound violated!"

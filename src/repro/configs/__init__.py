@@ -1,0 +1,115 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` / ``get_smoke(arch_id)`` resolve the full and
+reduced configs; ``input_specs`` builds ShapeDtypeStruct stand-ins for every
+model input of a given (config x shape) cell (dry-run pattern: weak-type
+correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME
+
+ARCH_IDS = (
+    "zamba2-2.7b",
+    "phi3-medium-14b",
+    "gemma3-4b",
+    "qwen2-1.5b",
+    "qwen1.5-4b",
+    "mamba2-1.3b",
+    "internvl2-26b",
+    "kimi-k2-1t-a32b",
+    "dbrx-132b",
+    "whisper-tiny",
+)
+
+# long_500k needs sub-quadratic attention; pure full-attention archs skip it
+# (see DESIGN.md §Arch-applicability / shape-cell skips).
+LONG_CONTEXT_OK = {"zamba2-2.7b", "mamba2-1.3b", "gemma3-4b"}
+
+
+def _module(arch_id: str):
+    name = arch_id.replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def cells(arch_id: str):
+    """The (shape) cells defined for this arch (applies long_500k skip)."""
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and arch_id not in LONG_CONTEXT_OK:
+            continue
+        out.append(s)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                grad_accum: int = 1) -> Dict:
+    """ShapeDtypeStruct stand-ins for the token-side step inputs.
+
+    ``grad_accum > 1`` pre-splits train batches to (A, B//A, ...) — the
+    microbatch scan dim is leading and never sharded.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "decode":
+        specs = {"tokens": tok(B, 1)}
+    else:
+        if cfg.family == "vlm" and cfg.frontend_tokens:
+            t = S - cfg.frontend_tokens
+            specs = {
+                "tokens": tok(B, t),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_tokens, cfg.d_model), jnp.float32),
+            }
+        elif cfg.family == "audio":
+            specs = {
+                "tokens": tok(B, S),
+                "audio_frames": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_tokens, cfg.d_model), jnp.float32),
+            }
+        else:
+            specs = {"tokens": tok(B, S)}
+        if shape.kind == "train":
+            lt = specs["tokens"].shape[1]
+            specs["labels"] = tok(B, lt)
+            if grad_accum > 1:
+                assert B % grad_accum == 0, (B, grad_accum)
+                specs = {
+                    k: jax.ShapeDtypeStruct(
+                        (grad_accum, v.shape[0] // grad_accum) + v.shape[1:],
+                        v.dtype)
+                    for k, v in specs.items()}
+    return specs
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh, policy: str,
+                 grad_accum: int = 1):
+    """PartitionSpecs matching input_specs (batch over pod+data; the
+    leading microbatch dim, when present, is unsharded)."""
+    from repro.distributed.sharding import logical_to_pspec
+    specs = input_specs(cfg, shape, grad_accum)
+    accum = grad_accum > 1 and shape.kind == "train"
+    out = {}
+    for k, v in specs.items():
+        logical = [None] * len(v.shape)
+        logical[1 if accum else 0] = "batch"
+        out[k] = logical_to_pspec(v.shape, logical, mesh, policy)
+    return out

@@ -1,0 +1,148 @@
+"""Config system for the repro framework.
+
+A single frozen dataclass describes every supported architecture family
+(dense / ssm / hybrid / moe / vlm / audio).  Configs are plain data: models,
+sharding rules and the launcher all consume them.  Each assigned architecture
+lives in ``src/repro/configs/<id>.py`` exposing ``CONFIG`` (full size, used
+only via ShapeDtypeStruct in the dry-run) and ``SMOKE`` (reduced, actually
+instantiated in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+    "float16": jnp.float16,
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity -----------------------------------------------------------
+    name: str = "model"
+    family: str = "dense"  # dense | ssm | hybrid | moe | vlm | audio
+    # backbone -----------------------------------------------------------
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    d_ff: int = 256
+    vocab_size: int = 256
+    act: str = "swiglu"          # swiglu | gelu
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    pos_embed: str = "rope"      # rope | learned (whisper)
+    max_seq_len: int = 4096
+    # attention pattern ---------------------------------------------------
+    sliding_window: int = 0      # 0 -> full causal
+    local_global_ratio: int = 0  # N -> every (N+1)-th layer is global (gemma3: 5)
+    # ssm (mamba2 / hybrid) ------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_kernel: int = 4
+    ssm_chunk: int = 128          # SSD chunk length
+    # hybrid (zamba2-style shared attention block) -------------------------
+    shared_attn_every: int = 0   # 0 -> no shared attention block
+    # moe -------------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    num_shared_experts: int = 0   # kimi-style always-on shared expert(s)
+    moe_gather_dtype: str = "bf16"  # "int8" halves the ZeRO-3 expert-shard
+                                    # all-gather wire (lossy; see §Perf)
+    moe_route: str = "replicate_psum"  # | "a2a" (token-routing EP, §Perf)
+    moe_ffn_mode: str = "gather"       # | "psum" (local-F partial sums)
+    # enc-dec (whisper) ------------------------------------------------------
+    encoder_layers: int = 0
+    encoder_tokens: int = 0      # stub frontend output length (1500 for whisper)
+    # vlm -------------------------------------------------------------------
+    frontend: str = ""           # "" | vit_stub | conv_stub
+    frontend_tokens: int = 0     # patch tokens prepended to the text sequence
+    # numerics / performance ------------------------------------------------
+    dtype: str = "bfloat16"
+    remat: str = "layer"         # none | layer | chunk
+    remat_chunk: int = 0         # layers per remat chunk when remat == "chunk"
+    scan_layers: bool = True
+    logits_chunk: int = 0        # 0 -> materialize logits; else chunked CE/score
+    # sharding --------------------------------------------------------------
+    sharding: str = "fsdp_tp"    # tp | fsdp_tp
+    seq_shard_train: bool = True # shard train activations' seq dim over "model"
+    # classifier head for MCAL labeling tasks --------------------------------
+    num_classes: int = 0         # 0 -> plain LM head over vocab
+    input_dim: int = 0           # mlp family: feature-vector input width
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def jnp_dtype(self):
+        return DTYPES[self.dtype]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: what gets lowered in the dry-run."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule / runtime knobs."""
+
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    # memory levers for giant models
+    moment_dtype: str = "float32"     # float32 | bfloat16 | int8
+    factored_second_moment: bool = False
+    # schedule: the paper trains 200 epochs with 10x LR drops at 80/120/160/180
+    schedule: str = "paper_steps"     # paper_steps | cosine | constant
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    # distributed tricks
+    grad_compression: str = "none"    # none | int8_ef
+    grad_accum: int = 1
+    accum_dtype: str = "float32"      # grad-accumulation carry dtype;
+                                      # bfloat16 halves the carry for
+                                      # >=100B models (f32 carry alone is
+                                      # 16 GB/chip for a 1T model @ 256)

@@ -1,0 +1,46 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 experts top-8 + 1 shared expert.
+[arXiv:2501.kimi2; unverified]  61L d_model=7168 64H (kv=8) d_ff=2048
+(per expert) vocab=163840.
+
+Simplification recorded in DESIGN.md: Kimi K2's dense first layer is modeled
+as MoE like the rest (param delta ~0.03%); attention follows the assigned
+GQA spec.  Expert weights are sharded expert->"model" and F->"data"
+(ZeRO-3 gather on use) so the ~2 TB of expert weights fit 256 x 16 GB."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=163840,
+    num_experts=384,
+    experts_per_token=8,
+    num_shared_experts=1,
+    moe_capacity_factor=1.25,
+    sharding="fsdp_tp",
+    seq_shard_train=False,   # MoE tokens stay batch-sharded (see moe_block)
+    remat="layer",
+    logits_chunk=16384,
+)
+
+SMOKE = ModelConfig(
+    name="kimi-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=32,
+    vocab_size=256,
+    num_experts=8,
+    experts_per_token=2,
+    num_shared_experts=1,
+    seq_shard_train=False,
+    remat="none",
+)

@@ -1,0 +1,20 @@
+"""MCAL — Minimum Cost Human-Machine Active Labeling (the paper's core).
+
+Public API:
+    run_mcal(task, service, cfg)      one campaign -> MCALResult
+    select_architecture(tasks, ...)   multi-classifier variant
+    MCALConfig / MCALCampaign         driver
+    fit_power_law / PowerLaw          Eqn. 3 error model
+    TrainCostModel / LabelingService  Eqn. 4 + $ models
+    joint_search / budget_search      (|B|, theta) optimization
+"""
+from repro.core.cost import (AMAZON, SATYAM, SERVICES, CostLedger,
+                             LabelingService, TrainCostModel)
+from repro.core.emulator import EmulatedTask, make_emulated_task
+from repro.core.mcal import (MCALCampaign, MCALConfig, MCALResult,
+                             SharedPool, run_mcal, select_architecture)
+from repro.core.powerlaw import PowerLaw, fit_power_law, required_size
+from repro.core.search import (SearchResult, adapt_delta, budget_search,
+                               joint_search)
+from repro.core.task import LiveTask
+from repro.core import selection  # noqa: F401

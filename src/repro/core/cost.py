@@ -1,0 +1,110 @@
+"""Cost models: human labeling services + iterative training cost (Eqn. 4).
+
+Training cost: with per-iteration cost proportional to the current training
+set size (fixed epochs) and acquisitions of ``delta`` per iteration, total
+cost from scratch to ``B`` is the paper's Eqn. 4::
+
+    C_t(B, delta) = 1/2 * c_u * B * (B/delta + 1)
+
+``c_u`` ($ per sample-iteration) is profiled on real hardware by timing the
+jitted train step (see :mod:`repro.core.task`).  The cubic variant (epochs
+proportional to size -> per-iteration cost ~ size^2) is exposed through
+``exponent=2``; any exponent falls back to an explicit schedule sum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelingService:
+    name: str
+    price_per_label: float  # $
+
+    def cost(self, n: int) -> float:
+        return float(n) * self.price_per_label
+
+
+AMAZON = LabelingService("amazon", 0.04)
+SATYAM = LabelingService("satyam", 0.003)
+SERVICES = {s.name: s for s in (AMAZON, SATYAM)}
+
+
+def schedule_sizes(start: int, end: int, delta: int) -> np.ndarray:
+    """Training-set sizes at each retrain when growing start -> end by delta."""
+    if end <= start:
+        return np.zeros((0,), np.int64)
+    delta = max(int(delta), 1)
+    return np.arange(start + delta, end + 1, delta, dtype=np.int64)
+
+
+@dataclasses.dataclass
+class TrainCostModel:
+    """Per-iteration training cost = c_u * size^exponent."""
+
+    c_u: float = 0.0
+    exponent: int = 1
+
+    def iteration_cost(self, size) -> np.ndarray:
+        return self.c_u * np.asarray(size, np.float64) ** self.exponent
+
+    def cost_from_scratch(self, B: float, delta: float) -> float:
+        """Eqn. 4 closed form (exponent 1); schedule sum otherwise."""
+        B = float(B)
+        delta = max(float(delta), 1.0)
+        if self.exponent == 1:
+            return 0.5 * self.c_u * B * (B / delta + 1.0)
+        sizes = schedule_sizes(0, int(round(B)), int(round(delta)))
+        return float(np.sum(self.iteration_cost(sizes)))
+
+    def cost_to_grow(self, start: float, end: float, delta: float) -> float:
+        """Future training cost to grow an existing set start -> end."""
+        if end <= start:
+            return 0.0
+        if self.exponent == 1:
+            # sum over sizes start+delta, start+2delta, ..., end
+            delta = max(float(delta), 1.0)
+            m = int(np.ceil((end - start) / delta))
+            sizes = np.minimum(start + delta * np.arange(1, m + 1), end)
+            return float(self.c_u * np.sum(sizes))
+        sizes = schedule_sizes(int(round(start)), int(round(end)),
+                               int(round(delta)))
+        return float(np.sum(self.iteration_cost(sizes)))
+
+    def fit(self, sizes: Sequence[float], costs: Sequence[float]) -> "TrainCostModel":
+        """Least-squares through the origin of cost vs size^exponent."""
+        s = np.asarray(sizes, np.float64) ** self.exponent
+        c = np.asarray(costs, np.float64)
+        denom = float(np.dot(s, s))
+        self.c_u = float(np.dot(s, c) / denom) if denom > 0 else 0.0
+        return self
+
+
+@dataclasses.dataclass
+class CostLedger:
+    """Running account of a labeling campaign."""
+
+    human: float = 0.0
+    training: float = 0.0
+    human_labels: int = 0
+
+    def pay_human(self, n: int, service: LabelingService) -> float:
+        c = service.cost(n)
+        self.human += c
+        self.human_labels += n
+        return c
+
+    def pay_training(self, c: float) -> float:
+        self.training += c
+        return c
+
+    @property
+    def total(self) -> float:
+        return self.human + self.training
+
+    def snapshot(self) -> dict:
+        return {"human": self.human, "training": self.training,
+                "total": self.total, "human_labels": self.human_labels}

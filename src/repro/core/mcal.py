@@ -1,0 +1,516 @@
+"""The MCAL driver (paper Alg. 1) + architecture selection + budget variant.
+
+One campaign = one (task, labeling service, MCALConfig).  The loop:
+
+  bootstrap:  human-label a test set T (test_frac) and a random seed set B0
+              (delta0_frac); train; measure eps_T(S^theta) over the theta grid.
+  iterate:    fit the per-theta truncated power laws and the training-cost
+              model from the measurement history; joint-search (|B|, theta)
+              for the predicted minimum cost C*; once C* stabilizes
+              (|dC*| <= stability_tol) adapt delta (Alg. 1 line 20) and stop
+              when |B| has reached B_opt; otherwise acquire delta more
+              samples ranked by M(.), human-label, retrain, re-measure.
+  bail-out:   if training spend exceeds bailout_frac of the full human-
+              labeling cost while no feasible machine labeling exists, label
+              everything with humans (the paper's ImageNet behaviour).
+  commit:     rank the remaining pool by L(.), machine-label the largest
+              prefix the *measured* test-set error curve admits within
+              eps_target, human-label the residual.
+
+Cost-accounting convention (Eqn. 1): predicted C = (|X| - |S|) * C_h +
+training spend so far + future training cost — human labels for T, B and the
+residual are all inside (|X| - |S|).
+
+``select_architecture`` runs several campaigns over a shared pool/ledger
+(labels bought once, every candidate trains) until all their C* estimates
+stabilize, then continues only the argmin-C* campaign — the paper's
+CNN18/Res18/Res50 selection.  ``budget`` in MCALConfig switches the search
+to the budget-constrained variant (min error s.t. cost <= budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import selection as sel
+from repro.core.cost import CostLedger, LabelingService, TrainCostModel
+from repro.core.powerlaw import PowerLaw, fit_power_law
+from repro.core.search import SearchResult, adapt_delta, budget_search, joint_search
+
+DEFAULT_THETAS = tuple(round(0.05 * i, 2) for i in range(1, 21))
+
+
+@dataclasses.dataclass(frozen=True)
+class MCALConfig:
+    eps_target: float = 0.05
+    thetas: Tuple[float, ...] = DEFAULT_THETAS
+    delta0_frac: float = 0.01
+    test_frac: float = 0.05
+    metric: str = "margin"          # M(.)
+    l_metric: str = "margin"        # L(.)
+    stability_tol: float = 0.05     # Delta (Alg. 1 line 19)
+    beta: float = 0.05              # delta-adaptation slack (line 20)
+    bailout_frac: float = 0.10      # exploration tax x%
+    bailout_min_s: float = 0.25     # "cannot machine-label any": |S*|/|X| floor
+    cost_exponent: int = 1          # per-iteration cost ~ |B|^exponent
+    max_iters: int = 200
+    min_fit_points: int = 3
+    seed: int = 0
+    keep_surface: bool = False
+    budget: Optional[float] = None  # set -> budget-constrained variant
+
+
+@dataclasses.dataclass
+class IterationRecord:
+    i: int
+    B_size: int
+    delta: int
+    eps_theta: Dict[float, float]
+    cstar: float
+    B_opt: int
+    theta_opt: float
+    feasible: bool
+    stable: bool
+    human_spent: float
+    training_spent: float
+    search: Optional[SearchResult] = None
+
+
+@dataclasses.dataclass
+class MCALResult:
+    labels: np.ndarray
+    machine_mask: np.ndarray
+    ledger: Dict
+    history: List[IterationRecord]
+    decision: str                  # hybrid | human_all
+    B_size: int
+    S_size: int
+    theta_final: float
+    measured_error: float          # vs groundtruth (simulation oracle)
+    arch_name: str = ""
+
+    @property
+    def total_cost(self) -> float:
+        return self.ledger["total"]
+
+
+class SharedPool:
+    """Label store shared across campaigns (arch selection buys labels once)."""
+
+    def __init__(self, pool_size: int, ledger: Optional[CostLedger] = None):
+        self.pool_size = pool_size
+        self.labels = np.full(pool_size, -1, np.int64)
+        self.is_test = np.zeros(pool_size, bool)
+        self.in_B = np.zeros(pool_size, bool)
+        self.T_idx: Optional[np.ndarray] = None
+        self.B_idx: np.ndarray = np.zeros((0,), np.int64)
+        self.ledger = ledger or CostLedger()
+
+    def buy_labels(self, task, idx: np.ndarray, service: LabelingService):
+        idx = np.asarray(idx, np.int64)
+        fresh = idx[self.labels[idx] < 0]
+        if len(fresh):
+            self.labels[fresh] = task.human_label(fresh)
+            self.ledger.pay_human(len(fresh), service)
+
+    def unlabeled_candidates(self) -> np.ndarray:
+        mask = (~self.is_test) & (~self.in_B)
+        return np.nonzero(mask)[0]
+
+
+class MCALCampaign:
+    def __init__(self, task, service: LabelingService, cfg: MCALConfig,
+                 shared: Optional[SharedPool] = None):
+        self.task = task
+        self.service = service
+        self.cfg = cfg
+        self.pool = shared or SharedPool(task.pool_size)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.history: List[IterationRecord] = []
+        # per-theta (B, eps) measurement history
+        self.eps_hist: Dict[float, List[Tuple[int, float]]] = {
+            t: [] for t in cfg.thetas}
+        self.train_sizes: List[int] = []
+        self.train_costs: List[float] = []
+        self.delta = 0
+        self.cstar_old: Optional[float] = None
+        self.stable = False
+        self.done = False
+        # this campaign's own training spend: C* predictions compare
+        # architectures as if each were running alone (the shared ledger
+        # still collects every candidate's spend as the exploration tax)
+        self.own_training = 0.0
+        self.freeze_delta = False   # exploration keeps delta at delta0
+        self.decision = "hybrid"
+        self.B_opt = 0
+        self.theta_opt = 0.0
+        self._anchor_feats: Optional[np.ndarray] = None
+        self._iter = 0
+
+    # -- bootstrap ----------------------------------------------------------
+    def bootstrap(self, *, adopt: bool = False):
+        X = self.task.pool_size
+        p = self.pool
+        if not adopt:
+            T_size = max(int(round(self.cfg.test_frac * X)), 16)
+            p.T_idx = self.rng.choice(X, T_size, replace=False)
+            p.is_test[p.T_idx] = True
+            p.buy_labels(self.task, p.T_idx, self.service)
+            delta0 = max(int(round(self.cfg.delta0_frac * X)), 8)
+            b0 = self.rng.choice(p.unlabeled_candidates(), delta0,
+                                 replace=False)
+            p.in_B[b0] = True
+            p.B_idx = b0
+            p.buy_labels(self.task, b0, self.service)
+        self.delta = len(p.B_idx)
+        self._train_and_measure()
+
+    # -- internals ----------------------------------------------------------
+    def _train_and_measure(self):
+        p = self.pool
+        c = self.task.train(p.B_idx, p.labels[p.B_idx])
+        p.ledger.pay_training(c)
+        self.own_training += c
+        self.train_sizes.append(len(p.B_idx))
+        self.train_costs.append(c)
+        stats_T, _ = self.task.score(p.T_idx)
+        correct = self.task.eval_correct(p.T_idx, p.labels[p.T_idx])
+        curve = sel.machine_label_error_curve(
+            stats_T, correct, self.cfg.thetas, self.cfg.l_metric)
+        for t, e in zip(self.cfg.thetas, curve):
+            self.eps_hist[t].append((len(p.B_idx), float(e)))
+
+    def _fit_models(self) -> Tuple[Dict[float, PowerLaw], TrainCostModel]:
+        laws = {}
+        for t, pts in self.eps_hist.items():
+            sizes = [s for s, _ in pts]
+            errs = [e for _, e in pts]
+            laws[t] = fit_power_law(sizes, errs,
+                                    truncated=len(pts) >= self.cfg.min_fit_points)
+        cm = TrainCostModel(exponent=self.cfg.cost_exponent).fit(
+            self.train_sizes, self.train_costs)
+        return laws, cm
+
+    def search(self, keep_surface: Optional[bool] = None) -> SearchResult:
+        laws, cm = self._fit_models()
+        p = self.pool
+        kw = dict(pool_size=self.task.pool_size, test_size=len(p.T_idx),
+                  current_B=len(p.B_idx), spent=self.own_training,
+                  laws=laws, cost_model=cm, delta=self.delta,
+                  service=self.service)
+        if self.cfg.budget is not None:
+            return budget_search(budget=self.cfg.budget, **kw)
+        return joint_search(eps_target=self.cfg.eps_target,
+                            keep_surface=self.cfg.keep_surface
+                            if keep_surface is None else keep_surface, **kw)
+
+    # -- one loop body --------------------------------------------------------
+    def iteration(self, *, acquire: bool = True,
+                  forced_acquisition: Optional[np.ndarray] = None):
+        assert not self.done
+        p = self.pool
+        X = self.task.pool_size
+        res = self.search()
+        self.B_opt, self.theta_opt = res.B_opt, res.theta_opt
+
+        # stability (line 19) + delta adaptation (line 20)
+        stable_now = (self.cstar_old is not None and res.cost > 0 and
+                      abs(res.cost - self.cstar_old) / res.cost
+                      <= self.cfg.stability_tol)
+        if stable_now:
+            self.stable = True
+        self.cstar_old = res.cost
+
+        rec = IterationRecord(
+            i=self._iter, B_size=len(p.B_idx), delta=self.delta,
+            eps_theta={t: self.eps_hist[t][-1][1] for t in self.cfg.thetas},
+            cstar=res.cost, B_opt=res.B_opt, theta_opt=res.theta_opt,
+            feasible=res.feasible, stable=self.stable,
+            human_spent=p.ledger.human, training_spent=p.ledger.training,
+            search=res if self.cfg.keep_surface else None)
+        self.history.append(rec)
+        self._iter += 1
+
+        if self.cfg.budget is not None:
+            # budget variant: stop training when the next acquisition would
+            # break the budget (reserve the residual human labels' worth).
+            next_spend = (self.delta * self.service.price_per_label +
+                          self._fit_models()[1].iteration_cost(
+                              len(p.B_idx) + self.delta))
+            if p.ledger.total + float(next_spend) > self.cfg.budget:
+                self.done = True
+                return rec
+        else:
+            # bail-out (paper §5.1 footnote): exploration tax exceeded while
+            # the classifier still cannot machine-label any meaningful
+            # fraction (ImageNet behaviour) -> human-label everything.
+            human_all = X * self.service.price_per_label
+            no_meaningful_S = (not res.feasible or res.theta_opt == 0.0 or
+                               res.machine_labeled < self.cfg.bailout_min_s * X)
+            if no_meaningful_S and \
+                    p.ledger.training > self.cfg.bailout_frac * human_all:
+                self.done = True
+                self.decision = "human_all"
+                return rec
+
+        if self.stable and not self.freeze_delta:
+            nd = adapt_delta(
+                current_B=len(p.B_idx), B_opt=res.B_opt, cstar=res.cost,
+                spent=self.own_training, pool_size=X, test_size=len(p.T_idx),
+                machine_labeled=res.machine_labeled,
+                cost_model=self._fit_models()[1], service=self.service,
+                beta=self.cfg.beta)
+            if nd > 0:
+                self.delta = nd
+
+        # Alg. 1 line 9: continue only while growing B is predicted to
+        # reduce cost (C* < C(B_opt + delta) <=> B_opt > |B|).  Gated on the
+        # fit having min_fit_points and a stable C* so one noisy early fit
+        # cannot end the campaign at a bad |B|.  Exploration-frozen
+        # campaigns (arch selection) never self-terminate.
+        enough = len(self.train_sizes) >= self.cfg.min_fit_points
+        if enough and self.stable and res.feasible and \
+                res.B_opt <= len(p.B_idx) and not self.freeze_delta:
+            self.done = True
+            return rec
+
+        if self._iter >= self.cfg.max_iters:
+            self.done = True
+            return rec
+
+        if acquire:
+            self.acquire(forced_acquisition)
+        return rec
+
+    def acquire(self, forced: Optional[np.ndarray] = None):
+        """Buy delta labels ranked by M(.), retrain, re-measure."""
+        p = self.pool
+        cand = p.unlabeled_candidates()
+        if len(cand) == 0:
+            self.done = True
+            return
+        if forced is not None:
+            pick = np.asarray(forced, np.int64)
+        else:
+            take = min(self.delta, len(cand))
+            if self.stable and self.B_opt > len(p.B_idx):
+                take = min(take, self.B_opt - len(p.B_idx))
+            stats = feats = None
+            if self.cfg.metric in sel.UNCERTAINTY_METRICS or \
+                    self.cfg.metric == "kcenter":
+                stats, feats = self.task.score(cand)
+            pick = sel.select_for_training(
+                self.cfg.metric, take, stats=stats, features=feats,
+                candidates=cand, anchors=self._anchor_feats, rng=self.rng)
+            if self.cfg.metric == "kcenter" and feats is not None:
+                chosen_rows = {c: i for i, c in enumerate(cand)}
+                rows = [chosen_rows[c] for c in pick]
+                new_anchors = feats[rows]
+                self._anchor_feats = (
+                    new_anchors if self._anchor_feats is None
+                    else np.concatenate([self._anchor_feats, new_anchors]))
+        p.buy_labels(self.task, pick, self.service)
+        p.in_B[pick] = True
+        p.B_idx = np.concatenate([p.B_idx, pick])
+        self._train_and_measure()
+
+    def propose_acquisition(self, k: int) -> np.ndarray:
+        """Rank candidates by this campaign's M(.) without committing."""
+        p = self.pool
+        cand = p.unlabeled_candidates()
+        k = min(k, len(cand))
+        stats, feats = self.task.score(cand)
+        return sel.select_for_training(
+            self.cfg.metric, k, stats=stats, features=feats,
+            candidates=cand, anchors=self._anchor_feats, rng=self.rng)
+
+    # -- commit ----------------------------------------------------------------
+    def commit(self) -> MCALResult:
+        p = self.pool
+        X = self.task.pool_size
+        remaining = p.unlabeled_candidates()
+        machine_mask = np.zeros(X, bool)
+
+        if self.cfg.budget is not None and len(remaining):
+            # afford as many residual human labels as the budget allows;
+            # machine-label the most confident rest (accuracy is what gives)
+            afford = max(self.cfg.budget - p.ledger.total, 0.0)
+            n_human = min(int(afford / self.service.price_per_label),
+                          len(remaining))
+            m = len(remaining) - n_human
+            stats_R, _ = self.task.score(remaining)
+            order = sel.rank_for_machine_labeling(stats_R, self.cfg.l_metric)
+            S_idx = remaining[order[:m]]
+            residual = remaining[order[m:]]
+            if m:
+                p.labels[S_idx] = self.task.predict(S_idx)
+                machine_mask[S_idx] = True
+            p.buy_labels(self.task, residual, self.service)
+            gt = self.task.human_label(np.arange(X))
+            return MCALResult(
+                labels=p.labels.copy(), machine_mask=machine_mask,
+                ledger=p.ledger.snapshot(), history=self.history,
+                decision="budget", B_size=len(p.B_idx), S_size=int(m),
+                theta_final=m / max(len(remaining), 1),
+                measured_error=float(np.mean(p.labels != gt)),
+                arch_name=getattr(self.task, "arch_name", ""))
+
+        if self.decision == "human_all" or self.theta_opt <= 0.0 \
+                or len(remaining) == 0:
+            p.buy_labels(self.task, remaining, self.service)
+            self.decision = "human_all"
+            theta_final, S_size = 0.0, 0
+        else:
+            # measured (not predicted) feasibility at the final model
+            stats_T, _ = self.task.score(p.T_idx)
+            correct = self.task.eval_correct(p.T_idx, p.labels[p.T_idx])
+            fine = np.linspace(0.01, 1.0, 100)
+            curve = sel.machine_label_error_curve(
+                stats_T, correct, fine, self.cfg.l_metric)
+            overall = fine * len(remaining) / X * curve
+            ok = np.nonzero(overall <= self.cfg.eps_target)[0]
+            theta_final = float(fine[ok[-1]]) if len(ok) else 0.0
+            m = int(round(theta_final * len(remaining)))
+            if m <= 0:
+                p.buy_labels(self.task, remaining, self.service)
+                self.decision = "human_all"
+                theta_final, S_size = 0.0, 0
+            else:
+                stats_R, _ = self.task.score(remaining)
+                order = sel.rank_for_machine_labeling(stats_R, self.cfg.l_metric)
+                S_idx = remaining[order[:m]]
+                residual = remaining[order[m:]]
+                p.labels[S_idx] = self.task.predict(S_idx)
+                machine_mask[S_idx] = True
+                p.buy_labels(self.task, residual, self.service)
+                S_size = m
+
+        gt = self.task.human_label(np.arange(X))  # oracle, evaluation only
+        measured_error = float(np.mean(p.labels != gt))
+        return MCALResult(
+            labels=p.labels.copy(), machine_mask=machine_mask,
+            ledger=p.ledger.snapshot(), history=self.history,
+            decision=self.decision, B_size=len(p.B_idx), S_size=S_size,
+            theta_final=theta_final, measured_error=measured_error,
+            arch_name=getattr(self.task, "arch_name", ""))
+
+    def run(self) -> MCALResult:
+        self.bootstrap()
+        while not self.done:
+            self.iteration()
+        return self.commit()
+
+    # -- campaign fault tolerance ------------------------------------------
+    def state_dict(self) -> Dict:
+        """JSON-serializable loop state: a preempted labeling campaign
+        resumes mid-loop from this (the classifier itself is retrained from
+        the persisted label set — labels are the expensive thing)."""
+        p = self.pool
+        return {
+            "labels": p.labels.tolist(),
+            "is_test": np.nonzero(p.is_test)[0].tolist(),
+            "B_idx": p.B_idx.tolist(),
+            "ledger": p.ledger.snapshot(),
+            "eps_hist": {str(t): v for t, v in self.eps_hist.items()},
+            "train_sizes": self.train_sizes,
+            "train_costs": self.train_costs,
+            "delta": self.delta,
+            "cstar_old": self.cstar_old,
+            "stable": self.stable,
+            "own_training": self.own_training,
+            "iter": self._iter,
+        }
+
+    def load_state_dict(self, s: Dict):
+        from repro.core.cost import CostLedger
+        p = self.pool
+        p.labels = np.asarray(s["labels"], np.int64)
+        p.is_test[:] = False
+        p.is_test[np.asarray(s["is_test"], np.int64)] = True
+        p.T_idx = np.asarray(s["is_test"], np.int64)
+        p.B_idx = np.asarray(s["B_idx"], np.int64)
+        p.in_B[:] = False
+        p.in_B[p.B_idx] = True
+        led = s["ledger"]
+        p.ledger = CostLedger(human=led["human"], training=led["training"],
+                              human_labels=led["human_labels"])
+        self.eps_hist = {float(t): [tuple(x) for x in v]
+                         for t, v in s["eps_hist"].items()}
+        self.train_sizes = list(s["train_sizes"])
+        self.train_costs = list(s["train_costs"])
+        self.delta = int(s["delta"])
+        self.cstar_old = s["cstar_old"]
+        self.stable = bool(s["stable"])
+        self.own_training = float(s["own_training"])
+        self._iter = int(s["iter"])
+        # retrain the classifier on the persisted label set
+        self.task.train(p.B_idx, p.labels[p.B_idx])
+
+
+def run_mcal(task, service: LabelingService,
+             cfg: MCALConfig = MCALConfig()) -> MCALResult:
+    return MCALCampaign(task, service, cfg).run()
+
+
+def select_architecture(
+    tasks: Dict[str, object], service: LabelingService,
+    cfg: MCALConfig = MCALConfig(), max_explore_iters: int = 24,
+) -> Tuple[str, MCALResult, Dict[str, List[IterationRecord]]]:
+    """Paper §4 extension: explore all candidate classifiers over a shared
+    pool until every campaign's C* stabilizes, then continue the argmin-C*
+    campaign alone.  Labels are bought once; every candidate pays its own
+    training cost into the shared ledger (the exploration tax)."""
+    names = list(tasks)
+    pool = SharedPool(tasks[names[0]].pool_size)
+    camps = {n: MCALCampaign(tasks[n], service, cfg, shared=pool)
+             for n in names}
+    for c in camps.values():
+        c.freeze_delta = True       # exploration stays at delta0
+    camps[names[0]].bootstrap()
+    for n in names[1:]:
+        camps[n].bootstrap(adopt=True)
+
+    def argmin_cstar():
+        cs = {n: camps[n].cstar_old if camps[n].cstar_old is not None
+              else np.inf for n in names}
+        return min(cs, key=cs.get)
+
+    rounds, leader_votes, last_leader = 0, 0, None
+    while rounds < max_explore_iters:
+        # leader rotates: its M(.) picks the next acquisition for everyone
+        leader = camps[names[rounds % len(names)]]
+        # elect early once the C* ranking is confidently settled: every
+        # campaign has a fit and the argmin is unchanged 3 rounds running
+        # ("trains each classifier up to the point where it is able to
+        # confidently predict which architecture achieves the lowest cost")
+        if all(c.stable for c in camps.values()) or leader_votes >= 3:
+            break
+        pick = leader.propose_acquisition(leader.delta)
+        for i, n in enumerate(names):
+            # every campaign adopts the same acquisition; only one mutates B
+            camps[n].iteration(acquire=(i == 0), forced_acquisition=pick)
+            if i == 0:
+                continue
+            camps[n]._train_and_measure()
+        cur = argmin_cstar()
+        enough = all(len(c.train_sizes) >= cfg.min_fit_points
+                     for c in camps.values())
+        leader_votes = leader_votes + 1 if (enough and cur == last_leader) else 0
+        last_leader = cur
+        if any(c.done for c in camps.values()):
+            break
+        rounds += 1
+
+    cstars = {n: camps[n].cstar_old if camps[n].cstar_old is not None
+              else np.inf for n in names}
+    winner = min(cstars, key=cstars.get)
+    wc = camps[winner]
+    wc.freeze_delta = False
+    wc.stable = False   # re-establish C* stability in the continuation
+    while not wc.done:
+        wc.iteration()
+    result = wc.commit()
+    histories = {n: camps[n].history for n in names}
+    return winner, result, histories

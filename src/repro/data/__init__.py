@@ -1,0 +1,3 @@
+from repro.data import loader, pool, synth  # noqa: F401
+from repro.data.synth import make_classification, make_lm_tokens  # noqa: F401
+from repro.data.pool import LabelPool  # noqa: F401

@@ -1,0 +1,71 @@
+"""Sharded batching + host->device pipeline.
+
+``ShardedLoader`` feeds the distributed train step: host numpy arrays are
+cut into global batches, each placed as one global array with the batch dim
+sharded over ("pod", "data") via ``jax.make_array_from_callback`` — each
+device receives only its shard, so the host never materializes per-device
+copies.  A one-deep prefetch overlaps host slicing with device compute.
+
+On a single CPU device this degrades to plain device_put, so the same loop
+drives tests and the production launcher.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = (axes if len(axes) > 1 else (axes[0] if axes else None),) + \
+        (None,) * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
+def device_put_global(array: np.ndarray, mesh: Optional[Mesh]):
+    if mesh is None:
+        return jax.device_put(array)
+    sh = batch_sharding(mesh, array.ndim)
+    return jax.make_array_from_callback(
+        array.shape, sh, lambda idx: array[idx])
+
+
+class ShardedLoader:
+    def __init__(self, data: Dict[str, np.ndarray], global_batch: int,
+                 mesh: Optional[Mesh] = None, seed: int = 0,
+                 drop_last: bool = True, prefetch: int = 1):
+        sizes = {k: len(v) for k, v in data.items()}
+        assert len(set(sizes.values())) == 1, sizes
+        self.data = data
+        self.n = next(iter(sizes.values()))
+        self.global_batch = global_batch
+        self.mesh = mesh
+        self.rng = np.random.default_rng(seed)
+        self.drop_last = drop_last
+        self.prefetch = prefetch
+
+    def _host_batches(self) -> Iterator[Dict[str, np.ndarray]]:
+        order = self.rng.permutation(self.n)
+        nb = self.n // self.global_batch if self.drop_last else \
+            -(-self.n // self.global_batch)
+        for b in range(nb):
+            sel = order[b * self.global_batch:(b + 1) * self.global_batch]
+            if len(sel) < self.global_batch:
+                sel = np.concatenate(
+                    [sel, order[: self.global_batch - len(sel)]])
+            yield {k: v[sel] for k, v in self.data.items()}
+
+    def epoch(self) -> Iterator[Dict]:
+        """One epoch of device-resident global batches (1-deep prefetch)."""
+        queue = collections.deque()
+        for host_batch in self._host_batches():
+            queue.append({k: device_put_global(v, self.mesh)
+                          for k, v in host_batch.items()})
+            if len(queue) > self.prefetch:
+                yield queue.popleft()
+        while queue:
+            yield queue.popleft()

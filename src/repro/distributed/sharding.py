@@ -1,0 +1,250 @@
+"""Logical-axis sharding rules (MaxText-style, divisibility-aware).
+
+Every parameter is annotated with logical axis names; a policy maps logical
+axes to mesh axes.  ``logical_to_pspec`` drops any assignment that does not
+divide evenly into the mesh (e.g. qwen2's 12 query heads over a 16-way
+"model" axis fall back to replication) so the same model code lowers on any
+mesh without per-arch special cases.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary ------------------------------------------------
+#   embed   : d_model dim of weights
+#   heads   : query-head dim
+#   kv      : kv-head dim
+#   mlp     : ffn hidden dim
+#   vocab   : vocabulary dim
+#   expert  : MoE expert dim
+#   expert_mlp : per-expert ffn hidden dim (2nd shard axis for giant MoE)
+#   layers  : stacked scan dim (never sharded)
+#   conv    : ssm conv kernel dim (never sharded)
+#   state   : ssm state dim (never sharded)
+#   batch   : activation batch
+#   seq     : activation sequence
+#   act_embed : activation d_model
+
+AxisAssign = Union[None, str, Tuple[str, ...]]
+
+POLICIES: Dict[str, Dict[str, AxisAssign]] = {
+    # Pure tensor parallel: weights replicated over "data"/"pod".
+    "tp": {
+        "embed": None,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": "data",
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "ssm_heads": "model",
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_embed": None,
+        "act_seq_train": "model",
+        "cache_seq": ("model", "data", "pod"),
+        "cache_batch": ("pod", "data"),
+    },
+    # FSDP x TP: weights additionally sharded over "data" on the non-TP dim.
+    "fsdp_tp": {
+        "embed": "data",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": "data",
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "ssm_heads": "model",
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_embed": None,
+        "act_seq_train": "model",
+        "cache_seq": ("model", "data", "pod"),
+        "cache_batch": ("pod", "data"),
+    },
+    # fsdp_tp with SEQUENCE-SHARDED activations: the scan carries (the
+    # memory term that forces deep grad accumulation on giant models)
+    # shrink by the "model" size, so accum drops to 1 and per-microbatch
+    # weight re-gathers stop multiplying (EXPERIMENTS §Perf Cell C it-2).
+    # Attention K/V gathers over "model" and the MoE uses the a2a route.
+    "fsdp_tp_seq": {
+        "embed": "data",
+        "heads": None,          # tokens are seq-sharded, not head-sharded
+        "kv": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": "data",
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "ssm_heads": None,
+        "batch": ("pod", "data"),
+        "seq": "model",
+        "act_embed": None,
+        "act_seq_train": "model",
+        "cache_seq": ("model", "data", "pod"),
+        "cache_batch": ("pod", "data"),
+    },
+    # Pure ZeRO-3 data parallelism over the WHOLE mesh: no tensor
+    # parallelism, batch sharded over every axis, weights sharded over
+    # (data, model) jointly on one dim and re-gathered per use.  The right
+    # regime for small-d_model models where 16-way TP's activation
+    # all-reduces dwarf compute (see EXPERIMENTS.md §Perf, mamba2 train).
+    "fsdp": {
+        "embed": ("data", "model"),   # ragged vocabs shard on D instead
+        "heads": None,
+        "kv": None,
+        "mlp": ("data", "model"),
+        "vocab": ("data", "model"),
+        "expert": ("data", "model"),
+        "expert_mlp": None,
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "ssm_heads": None,
+        "batch": ("pod", "data", "model"),
+        "seq": None,
+        "act_embed": None,
+        "act_seq_train": None,
+        "cache_seq": ("model",),
+        "cache_batch": ("pod", "data"),
+    },
+    # Serving with replicated weights + sequence-sharded activations:
+    # zero weight-movement; attention K/V gathers over "model" are the only
+    # collective (and local/sliding-window layers touch just a halo).  The
+    # right regime for prefill/pool-scoring of models whose full weights
+    # fit one chip (see EXPERIMENTS.md §Perf, gemma3 prefill).
+    "seq_serve": {
+        "embed": None,
+        "heads": None,
+        "kv": None,
+        "mlp": None,
+        "vocab": None,
+        "expert": None,
+        "expert_mlp": None,
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "ssm_heads": None,
+        "batch": ("pod", "data"),
+        "seq": "model",
+        "act_embed": None,
+        "act_seq_train": None,
+        "cache_seq": "model",
+        "cache_batch": ("pod", "data"),
+    },
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _assign_size(assign: AxisAssign, sizes: Dict[str, int]) -> int:
+    if assign is None:
+        return 1
+    if isinstance(assign, str):
+        return sizes.get(assign, 1)
+    return math.prod(sizes.get(a, 1) for a in assign)
+
+
+def _filter_assign(assign: AxisAssign, sizes: Dict[str, int]) -> AxisAssign:
+    """Drop mesh axes absent from the mesh (e.g. 'pod' on single-pod)."""
+    if assign is None:
+        return None
+    if isinstance(assign, str):
+        return assign if assign in sizes else None
+    kept = tuple(a for a in assign if a in sizes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def logical_to_pspec(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    policy: str,
+) -> P:
+    """Build a PartitionSpec for ``shape`` annotated with logical axes.
+
+    Any logical->mesh assignment whose mesh size does not evenly divide the
+    corresponding dim is dropped (replicated); a mesh axis is used at most
+    once per spec.
+    """
+    rules = POLICIES[policy]
+    sizes = mesh_axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, logical):
+        assign = rules.get(ax) if ax else None
+        if assign is None:
+            out.append(None)
+            continue
+        names = (assign,) if isinstance(assign, str) else tuple(assign)
+        # greedy: keep each mesh axis that exists, is unused, and divides
+        kept = []
+        prod = 1
+        for n in names:
+            if n in sizes and n not in used and dim % (prod * sizes[n]) == 0 and sizes[n] > 1:
+                kept.append(n)
+                prod *= sizes[n]
+        if not kept:
+            out.append(None)
+            continue
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1 else kept[0])
+    return P(*out)
+
+
+def tree_pspecs(abstract_tree, logical_tree, mesh: Mesh, policy: str):
+    """Map a pytree of ShapeDtypeStructs + matching logical-axes tree
+    (tuples of logical names) to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda leaf, logical: logical_to_pspec(leaf.shape, logical, mesh, policy),
+        abstract_tree,
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        math.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree)
+    )
+
+
+def constrain(x, mesh, policy: str, *logical: str):
+    """with_sharding_constraint by logical axis names (one per dim).
+
+    The SPMD partitioner loses batch sharding inside scanned + rematted
+    blocks unless activations are pinned (MaxText-style); every model
+    block calls this at its boundaries.  No-op when mesh is None.
+    Assignments that don't divide the dim fall back to replication via
+    ``logical_to_pspec``.
+    """
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(x.shape, logical, mesh, policy)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots MCAL exercises at scale:
+
+* ``margin_head``     — fused vocab projection + online top-2/entropy/lse
+                        (pool scoring over 100k-262k vocabularies);
+* ``flash_attention`` — blockwise attention, causal/sliding-window, GQA via
+                        BlockSpec index mapping (prefill hot-spot);
+* ``ssd_scan``        — Mamba2 SSD chunked scan, state carried in VMEM.
+
+``ops`` holds the jit'd wrappers (kernel or jnp-ref, backend-gated);
+``ref`` the pure-jnp oracles used by the allclose test sweeps.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.margin_head import margin_head  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401

@@ -1,0 +1,113 @@
+"""Blockwise (flash) attention Pallas kernel with causal + sliding-window
+masking and GQA via BlockSpec index mapping (no KV head expansion copy).
+
+Grid: (B, H, Tq tiles, Tk tiles) — Tk innermost; the (o, m, l) online-
+softmax carry lives in VMEM scratch and the normalized output is written at
+the last Tk step.  KV blocks for query head h are fetched from kv head
+h // group via the index_map, so GQA never materializes repeated K/V.
+
+Tile defaults (bq=bk=256, hd<=256) keep q/k/v/o tiles around 0.5-1 MB —
+comfortably inside v5e VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, o_sc, m_sc, l_sc, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            Tq: int, Tk: int):
+    ti = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_sc[:] = jnp.zeros_like(o_sc)
+        m_sc[:] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[:] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0] * scale                      # (bq, hd)
+    k = k_ref[0, 0]                              # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = ti * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = (q_pos < Tq) & (k_pos < Tk)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_old, l_old = m_sc[:], l_sc[:]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_old - m_new)
+    l_sc[:] = l_old * corr + jnp.sum(p, axis=-1)
+    pv = jnp.dot(p.astype(v_ref.dtype), v_ref[0, 0],
+                 preferred_element_type=jnp.float32)
+    o_sc[:] = o_sc[:] * corr[:, None] + pv
+    m_sc[:] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (o_sc[:] / jnp.maximum(l_sc[:], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, Tq, hd); k, v: (B, Hk, Tk, hd), H % Hk == 0 -> (B, H, Tq, hd).
+
+    Note the head-major layout (transposed from the model's (B, T, H, hd));
+    ``ops.attention`` adapts.
+    """
+    B, H, Tq, hd = q.shape
+    _, Hk, Tk, _ = k.shape
+    assert H % Hk == 0, (H, Hk)
+    G = H // Hk
+    scale = hd ** -0.5 if scale is None else scale
+    bq = min(bq, max(Tq, 8))
+    bk = min(bk, max(Tk, 8))
+    Tqp = -(-Tq // bq) * bq
+    Tkp = -(-Tk // bk) * bk
+    if Tqp != Tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Tqp - Tq), (0, 0)))
+    if Tkp != Tk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Tkp - Tk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Tkp - Tk), (0, 0)))
+
+    grid = (B, H, Tqp // bq, Tkp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, Tq=Tq, Tk=Tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, t, s: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, t, s: (b, h // G, s, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, t, s: (b, h // G, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, t, s: (b, h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Tq, :]

@@ -1,0 +1,74 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``use_pallas(...)`` gates kernel vs. jnp-reference per call site:
+the kernels are written for TPU (Mosaic) and validated on CPU in
+interpret mode; ``interpret`` is selected automatically from the backend.
+The model layers call these entry points, so swapping kernel<->ref is a
+flag, never a code change.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import margin_head as _mh
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref as _ref
+from repro.models.layers import ScoreStats
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def use_pallas() -> bool:
+    env = os.environ.get("REPRO_USE_PALLAS", "auto")
+    if env == "auto":
+        return jax.default_backend() == "tpu"
+    return env in ("1", "true", "yes")
+
+
+def score_head(hidden: jax.Array, w_vocab: jax.Array, *,
+               force_pallas: Optional[bool] = None) -> ScoreStats:
+    """Pool-scoring statistics for MCAL's M(.)/L(.).  hidden: (..., D)."""
+    lead = hidden.shape[:-1]
+    h2 = hidden.reshape(-1, hidden.shape[-1])
+    on = use_pallas() if force_pallas is None else force_pallas
+    if on:
+        m, e, mlp, t1 = _mh.margin_head(h2, w_vocab, interpret=_interpret())
+    else:
+        m, e, mlp, t1 = _ref.margin_head_ref(h2, w_vocab)
+    return ScoreStats(
+        margin=m.reshape(lead), entropy=e.reshape(lead),
+        max_logprob=mlp.reshape(lead), top1=t1.reshape(lead))
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              scale: Optional[float] = None,
+              force_pallas: Optional[bool] = None) -> jax.Array:
+    """Model-layout attention (B, T, H, hd) x (B, Tk, Hk, hd)."""
+    on = use_pallas() if force_pallas is None else force_pallas
+    if on:
+        out = _fa.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window,
+            scale=scale, interpret=_interpret())
+        return out.transpose(0, 2, 1, 3)
+    from repro.models.layers import blockwise_attention
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, kv_chunk=min(1024, k.shape[1]))
+
+
+def ssd(xh, dt, A, Bm, Cm, *, chunk: int = 128,
+        force_pallas: Optional[bool] = None):
+    on = use_pallas() if force_pallas is None else force_pallas
+    if on:
+        return _ssd.ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk,
+                             interpret=_interpret())
+    return _ref.ssd_scan_ref(xh, dt, A, Bm, Cm, chunk=chunk)

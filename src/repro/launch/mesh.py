@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set
+``--xla_force_host_platform_device_count`` before first jax init).
+
+Mesh axes:
+  single-pod: (16, 16)      -> ("data", "model")      = 256 chips
+  multi-pod:  (2, 16, 16)   -> ("pod", "data", "model") = 512 chips
+
+Batch shards over ("pod", "data"); TP/EP over "model"; the "pod" axis is
+the slow inter-pod link where gradient compression applies.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D 'data' mesh (tests/smoke runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

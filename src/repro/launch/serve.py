@@ -1,0 +1,60 @@
+"""Serving launcher: batched generation with the ServeEngine.
+
+Smoke-scale:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config, get_smoke
+    from repro.models.registry import get_model
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.family == "audio":
+        batch["audio_frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.encoder_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm" and cfg.frontend_tokens:
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.frontend_tokens, cfg.d_model)),
+            jnp.float32)
+
+    engine = ServeEngine(model, params,
+                         max_seq=args.prompt_len + args.gen + 8,
+                         batch_size=args.batch)
+    t0 = time.perf_counter()
+    out = engine.generate(batch, args.gen)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    print(f"[serve] generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(np.asarray(out)[:2])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Training launcher.
+
+Smoke-scale on this host:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --smoke --steps 30 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a real cluster the same entry point runs with --no-smoke: full config,
+production mesh, sharded loader (each host feeds its addressable shard) —
+the Trainer handles resume/checkpoint/straggler monitoring either way.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on host devices")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config, get_smoke
+    from repro.configs.base import TrainConfig
+    from repro.data.loader import ShardedLoader
+    from repro.data.synth import make_lm_tokens
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.registry import get_model
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    print(f"[train] arch={args.arch} params={model.param_count():,}")
+    tc = TrainConfig(learning_rate=args.lr, schedule="paper_steps",
+                     total_steps=args.steps)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         max_steps=args.steps, log_every=5)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+    trainer = Trainer(model, tc, tcfg, mesh=None if args.smoke else mesh,
+                      seed=args.seed)
+
+    toks = make_lm_tokens(args.batch * 64, args.seq + 1, cfg.vocab_size,
+                          seed=args.seed)
+    data = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    loader = ShardedLoader(data, args.batch, mesh=None, seed=args.seed)
+
+    def batches():
+        while True:
+            yield from loader.epoch()
+
+    metrics = trainer.fit(batches())
+    print(f"[train] done at step {trainer.step}: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

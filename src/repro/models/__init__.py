@@ -1,0 +1,2 @@
+from . import registry  # noqa: F401
+from .registry import get_model  # noqa: F401

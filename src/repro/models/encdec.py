@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB —
+``input_specs`` supplies precomputed frame embeddings (B, encoder_tokens, D)).
+
+LayerNorm + GELU + learned positions, per the Whisper architecture.  Decoder
+layers: causal self-attention, cross-attention to the encoder output, MLP.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.models import transformer as tf
+
+
+def _xattn_specs(cfg: ModelConfig, nl: int) -> Dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "norm": L.norm_specs(cfg, stacked=nl),
+        "wq": ParamSpec((nl, cfg.d_model, cfg.num_heads, hd),
+                        ("layers", "embed", "heads", None)),
+        "wk": ParamSpec((nl, cfg.d_model, cfg.num_kv_heads, hd),
+                        ("layers", "embed", "kv", None)),
+        "wv": ParamSpec((nl, cfg.d_model, cfg.num_kv_heads, hd),
+                        ("layers", "embed", "kv", None)),
+        "wo": ParamSpec((nl, cfg.num_heads, hd, cfg.d_model),
+                        ("layers", "heads", None, "embed")),
+    }
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    ne, nd = cfg.encoder_layers, cfg.num_layers
+    sp = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "enc_pos": ParamSpec((cfg.encoder_tokens, cfg.d_model), ("seq", "embed"), scale=0.02),
+        "dec_pos": ParamSpec((cfg.max_seq_len, cfg.d_model), ("seq", "embed"), scale=0.02),
+        "encoder": {
+            "attn": tf.attention_specs(cfg, ne),
+            "mlp_norm": L.norm_specs(cfg, stacked=ne),
+            "mlp": L.mlp_specs(cfg, stacked=ne),
+        },
+        "decoder": {
+            "attn": tf.attention_specs(cfg, nd),
+            "xattn": _xattn_specs(cfg, nd),
+            "mlp_norm": L.norm_specs(cfg, stacked=nd),
+            "mlp": L.mlp_specs(cfg, stacked=nd),
+        },
+        "enc_final_norm": L.norm_specs(cfg),
+        "final_norm": L.norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.num_classes:
+        sp["cls_head"] = ParamSpec((cfg.d_model, cfg.num_classes), ("embed", None))
+    return sp
+
+
+def _cross_attn(cfg: ModelConfig, p: Dict, x: jax.Array, enc_k: jax.Array,
+                enc_v: jax.Array) -> jax.Array:
+    xn = L.apply_norm(cfg, p["norm"], x)
+    q = jnp.einsum("btd,dnh->btnh", xn, p["wq"])
+    out = L.blockwise_attention(q, enc_k, enc_v, causal=False,
+                                kv_chunk=min(512, enc_k.shape[1]))
+    return jnp.einsum("btnh,nhd->btd", out, p["wo"])
+
+
+def _enc_kv(p: Dict, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dnh->btnh", enc_out, p["wk"])
+    v = jnp.einsum("btd,dnh->btnh", enc_out, p["wv"])
+    return k, v
+
+
+def encode(cfg: ModelConfig, params: Dict, audio_frames: jax.Array,
+           mesh=None) -> jax.Array:
+    """audio_frames: (B, encoder_tokens, D) stub frame embeddings."""
+    from repro.distributed.sharding import constrain
+    x = audio_frames.astype(cfg.jnp_dtype) + params["enc_pos"].astype(cfg.jnp_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, p):
+        h = constrain(h, mesh, cfg.sharding, "batch", "seq", "act_embed")
+        q, kk, vv = tf._qkv(cfg, p["attn"], h, positions, mesh=mesh)
+        out = L.blockwise_attention(q, kk, vv, causal=False,
+                                    kv_chunk=min(512, h.shape[1]))
+        h = h + jnp.einsum("btnh,nhd->btd", out, p["attn"]["wo"])
+        h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["mlp_norm"], h))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def _decode_blocks(cfg: ModelConfig, params: Dict, x: jax.Array,
+                   enc_out: jax.Array, positions: jax.Array,
+                   with_cache: bool = False, mesh=None):
+    from repro.distributed.sharding import constrain
+
+    def body(h, p):
+        h = constrain(h, mesh, cfg.sharding, "batch", "seq", "act_embed")
+        q, kk, vv = tf._qkv(cfg, p["attn"], h, positions, mesh=mesh)
+        ck = min(h.shape[1],
+                 L.pick_kv_chunk(h.shape[0], h.shape[1], cfg.num_heads))
+        out = L.blockwise_attention(q, kk, vv, causal=True, kv_chunk=ck)
+        h = h + jnp.einsum("btnh,nhd->btd", out, p["attn"]["wo"])
+        ek, ev = _enc_kv(p["xattn"], enc_out)
+        h = h + _cross_attn(cfg, p["xattn"], h, ek, ev)
+        h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["mlp_norm"], h))
+        h = constrain(h, mesh, cfg.sharding, "batch", "seq", "act_embed")
+        cache = None
+        if with_cache:
+            cache = {"k": kk.astype(cfg.jnp_dtype), "v": vv.astype(cfg.jnp_dtype),
+                     "xk": ek.astype(cfg.jnp_dtype), "xv": ev.astype(cfg.jnp_dtype)}
+        return h, cache
+
+    if cfg.remat != "none" and not with_cache:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.lax.scan(body, x, params["decoder"])
+
+
+def _embed_dec(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+               offset) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = offset + jnp.arange(tokens.shape[1])
+    return x + jnp.take(params["dec_pos"], pos, axis=0).astype(x.dtype)
+
+
+def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            audio_frames=None, mesh=None) -> jax.Array:
+    enc_out = encode(cfg, params, audio_frames, mesh=mesh)
+    x = _embed_dec(cfg, params, tokens, 0)
+    positions = jnp.arange(x.shape[1])
+    x, _ = _decode_blocks(cfg, params, x, enc_out, positions, mesh=mesh)
+    return L.apply_norm(cfg, params["final_norm"], x)
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            audio_frames=None, mesh=None):
+    enc_out = encode(cfg, params, audio_frames, mesh=mesh)
+    x = _embed_dec(cfg, params, tokens, 0)
+    positions = jnp.arange(x.shape[1])
+    x, caches = _decode_blocks(cfg, params, x, enc_out, positions,
+                               with_cache=True, mesh=mesh)
+    return L.apply_norm(cfg, params["final_norm"], x), caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    hd = cfg.resolved_head_dim
+    nl = cfg.num_layers
+    kv = jax.ShapeDtypeStruct((nl, batch, seq_len, cfg.num_kv_heads, hd), cfg.jnp_dtype)
+    xkv = jax.ShapeDtypeStruct((nl, batch, cfg.encoder_tokens, cfg.num_kv_heads, hd), cfg.jnp_dtype)
+    kvl = ("layers", "cache_batch", "cache_seq", "kv", None)
+    xkvl = ("layers", "cache_batch", "seq", "kv", None)
+    ab = {"k": kv, "v": kv, "xk": xkv, "xv": xkv}
+    logical = {"k": kvl, "v": kvl, "xk": xkvl, "xv": xkvl}
+    return ab, logical
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    ab, _ = cache_specs(cfg, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, tokens: jax.Array,
+                cache_len, mesh=None):
+    x = _embed_dec(cfg, params, tokens, cache_len)
+    positions = cache_len + jnp.arange(x.shape[1])
+
+    def body(h, layer):
+        p, c = layer
+        q, kk, vv = tf._qkv(cfg, p["attn"], h, positions)
+        k_cache = jax.lax.dynamic_update_slice(
+            c["k"], kk.astype(c["k"].dtype), (0, cache_len, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            c["v"], vv.astype(c["v"].dtype), (0, cache_len, 0, 0))
+        out = L.decode_attention(q, k_cache, v_cache, kv_len=cache_len + 1)
+        h = h + jnp.einsum("btnh,nhd->btd", out, p["attn"]["wo"])
+        # cross-attention against the cached encoder projections
+        xn = L.apply_norm(cfg, p["xattn"]["norm"], h)
+        xq = jnp.einsum("btd,dnh->btnh", xn, p["xattn"]["wq"])
+        xout = L.decode_attention(xq, c["xk"], c["xv"], kv_len=c["xk"].shape[1])
+        h = h + jnp.einsum("btnh,nhd->btd", xout, p["xattn"]["wo"])
+        h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["mlp_norm"], h))
+        return h, {"k": k_cache, "v": v_cache, "xk": c["xk"], "xv": c["xv"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+    hidden = L.apply_norm(cfg, params["final_norm"], x)
+    return tf.logits_fn(cfg, params, hidden[:, -1:, :]), new_cache

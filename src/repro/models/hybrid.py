@@ -1,0 +1,189 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-SHARED attention+MLP
+block applied every ``shared_attn_every`` layers.
+
+Structure: ``num_layers`` mamba2 blocks grouped into
+``num_layers // shared_attn_every`` super-blocks; the shared transformer
+block (full attention + SwiGLU MLP, one set of weights) runs at the start of
+every super-block.  Each application site keeps its own KV cache for decode
+(weights shared, caches not).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.param import ParamSpec
+from repro.models import transformer as tf
+
+
+def _n_apps(cfg: ModelConfig) -> int:
+    assert cfg.shared_attn_every > 0 and cfg.num_layers % cfg.shared_attn_every == 0
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    sp = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "mamba_blocks": mamba2.block_specs(cfg, cfg.num_layers),
+        "shared": {
+            "attn": tf.attention_specs(cfg, 0),
+            "mlp_norm": L.norm_specs(cfg),
+            "mlp": L.mlp_specs(cfg),
+        },
+        "final_norm": L.norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.num_classes:
+        sp["cls_head"] = ParamSpec((cfg.d_model, cfg.num_classes), ("embed", None))
+    return sp
+
+
+def _shared_block(cfg: ModelConfig, p: Dict, x: jax.Array,
+                  positions: jax.Array, with_cache: bool = False, mesh=None):
+    from repro.distributed.sharding import constrain
+    x = constrain(x, mesh, cfg.sharding, "batch", "seq", "act_embed")
+    q, kk, vv = tf._qkv(cfg, p["attn"], x, positions, mesh=mesh)
+    ck = min(x.shape[1],
+             L.pick_kv_chunk(x.shape[0], x.shape[1], cfg.num_heads))
+    out = L.blockwise_attention(q, kk, vv, causal=True, kv_chunk=ck)
+    x = x + jnp.einsum("btnh,nhd->btd", out, p["attn"]["wo"])
+    x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["mlp_norm"], x))
+    x = constrain(x, mesh, cfg.sharding, "batch", "seq", "act_embed")
+    cache = {"k": kk.astype(cfg.jnp_dtype), "v": vv.astype(cfg.jnp_dtype)} if with_cache else None
+    return x, cache
+
+
+def _group_params(cfg: ModelConfig, params: Dict):
+    na, per = _n_apps(cfg), cfg.shared_attn_every
+    return jax.tree.map(lambda a: a.reshape((na, per) + a.shape[1:]),
+                        params["mamba_blocks"])
+
+
+def _forward_impl(cfg: ModelConfig, params: Dict, tokens, patch_embeds,
+                  with_cache: bool, mesh=None):
+    x = tf.embed_tokens(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1])
+    grouped = _group_params(cfg, params)
+    shared = params["shared"]
+
+    def body(h, group):
+        h, attn_cache = _shared_block(cfg, shared, h, positions, with_cache,
+                                      mesh=mesh)
+
+        def inner(h2, p):
+            if with_cache:
+                # rerun the mamba block while emitting final states
+                out, st = _run_mamba_with_state(cfg, p, h2, mesh=mesh)
+                return out, st
+            return mamba2.mamba_block(cfg, p, h2, mesh=mesh), None
+
+        h, ssm_states = jax.lax.scan(inner, h, group)
+        return h, (attn_cache, ssm_states)
+
+    if cfg.remat != "none" and not with_cache:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, grouped)
+    hidden = L.apply_norm(cfg, params["final_norm"], x)
+    return hidden, caches
+
+
+def _run_mamba_with_state(cfg: ModelConfig, p: Dict, h: jax.Array,
+                          mesh=None):
+    from repro.distributed.sharding import constrain
+    h = constrain(h, mesh, cfg.sharding, "batch", "seq", "act_embed")
+    xn = L.apply_norm(cfg, p["norm"], h)
+    z = jnp.einsum("btd,de->bte", xn, p["w_z"])
+    xs = jnp.einsum("btd,de->bte", xn, p["w_x"])
+    Bm = jnp.einsum("btd,dn->btn", xn, p["w_B"]).astype(jnp.float32)
+    Cm = jnp.einsum("btd,dn->btn", xn, p["w_C"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", xn, p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    xc = jax.nn.silu(mamba2._causal_conv(xs, p["conv_w"]).astype(jnp.float32)).astype(h.dtype)
+    xh = mamba2._split_heads(cfg, xc)
+    A = jnp.exp(p["A_log"])
+    y, h_fin = mamba2.ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D_skip"][None, None, :, None].astype(h.dtype)
+    y = y.reshape(h.shape[0], h.shape[1], cfg.ssm_d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype), p["gate_norm"])
+    out = h + jnp.einsum("bte,ed->btd", y, p["w_out"])
+    K = cfg.ssm_conv_kernel
+    return out, {"ssm": h_fin.astype(jnp.float32), "conv": xs[:, -(K - 1):, :]}
+
+
+def forward(cfg: ModelConfig, params: Dict, tokens, patch_embeds=None, mesh=None):
+    hidden, _ = _forward_impl(cfg, params, tokens, patch_embeds,
+                              with_cache=False, mesh=mesh)
+    return hidden
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens, patch_embeds=None, mesh=None):
+    hidden, (attn_caches, ssm_states) = _forward_impl(
+        cfg, params, tokens, patch_embeds, with_cache=True, mesh=mesh)
+    return hidden, {"attn": attn_caches, "ssm": ssm_states}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    na, per = _n_apps(cfg), cfg.shared_attn_every
+    hd = cfg.resolved_head_dim
+    H, shd, N = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K, di = cfg.ssm_conv_kernel, cfg.ssm_d_inner
+    kv = jax.ShapeDtypeStruct((na, batch, seq_len, cfg.num_kv_heads, hd), cfg.jnp_dtype)
+    ab = {
+        "attn": {"k": kv, "v": kv},
+        "ssm": {
+            "ssm": jax.ShapeDtypeStruct((na, per, batch, H, shd, N), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((na, per, batch, K - 1, di), cfg.jnp_dtype),
+        },
+    }
+    kvl = ("layers", "cache_batch", "cache_seq", "kv", None)
+    logical = {
+        "attn": {"k": kvl, "v": kvl},
+        "ssm": {
+            "ssm": ("layers", None, "cache_batch", "ssm_heads", None, "state"),
+            "conv": ("layers", None, "cache_batch", "conv", "mlp"),
+        },
+    }
+    return ab, logical
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    ab, _ = cache_specs(cfg, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, tokens,
+                cache_len, mesh=None):
+    x = tf.embed_tokens(cfg, params, tokens)
+    positions = cache_len + jnp.arange(x.shape[1])
+    grouped = _group_params(cfg, params)
+    shared = params["shared"]
+
+    def body(h, group):
+        p_group, attn_c, ssm_c = group
+        q, kk, vv = tf._qkv(cfg, shared["attn"], h, positions)
+        k_cache = jax.lax.dynamic_update_slice(
+            attn_c["k"], kk.astype(attn_c["k"].dtype), (0, cache_len, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            attn_c["v"], vv.astype(attn_c["v"].dtype), (0, cache_len, 0, 0))
+        out = L.decode_attention(q, k_cache, v_cache, kv_len=cache_len + 1)
+        h = h + jnp.einsum("btnh,nhd->btd", out, shared["attn"]["wo"])
+        h = h + L.apply_mlp(cfg, shared["mlp"],
+                            L.apply_norm(cfg, shared["mlp_norm"], h))
+
+        def inner(h2, layer):
+            p, st = layer
+            return mamba2.mamba_block_decode(cfg, p, h2, st)
+
+        h, ssm_new = jax.lax.scan(inner, h, (p_group, ssm_c))
+        return h, ({"k": k_cache, "v": v_cache}, ssm_new)
+
+    x, (attn_new, ssm_new) = jax.lax.scan(
+        body, x, (grouped, cache["attn"], cache["ssm"]))
+    hidden = L.apply_norm(cfg, params["final_norm"], x)
+    return tf.logits_fn(cfg, params, hidden[:, -1:, :]), {"attn": attn_new, "ssm": ssm_new}

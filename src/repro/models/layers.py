@@ -1,0 +1,374 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Everything here is written to lower cleanly under pjit on large meshes:
+attention is blockwise (flash-style online softmax via lax.scan) so no
+O(T^2) score tensor is ever materialized, and the final-projection scoring
+path has a vocab-chunked variant mirroring the Pallas ``margin_head``
+kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layernorm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"])
+
+
+def norm_specs(cfg: ModelConfig, stacked: int = 0) -> Dict:
+    lead = ((stacked,), ("layers",)) if stacked else ((), ())
+    spec = {
+        "scale": ParamSpec(lead[0] + (cfg.d_model,), lead[1] + ("act_embed",),
+                           init="zeros" if cfg.norm == "rmsnorm" else "ones",
+                           dtype=jnp.float32)
+    }
+    if cfg.norm == "layernorm":
+        spec["bias"] = ParamSpec(lead[0] + (cfg.d_model,), lead[1] + ("act_embed",),
+                                 init="zeros", dtype=jnp.float32)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) attention — pure jnp, scan over kv chunks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def pick_kv_chunk(batch: int, t_q: int, heads: int,
+                  budget_bytes: float = 2e9, dp: int = 16) -> int:
+    """KV-chunk length keeping the per-chunk f32 score tensor
+    (B/dp, Tq, H, ckv) under ``budget_bytes`` per device (long sequences
+    would otherwise materialize 10+ GB score tiles)."""
+    import math
+    per_col = max(batch / dp, 1) * t_q * heads * 4
+    ck = budget_bytes / max(per_col, 1)
+    ck = 2 ** int(max(math.log2(max(ck, 128)), 7))
+    return int(min(ck, 1024, max(t_q, 128)))
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """(Tq, Tk) additive bias implementing causal (+ optional sliding window)."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    ok = causal
+    if window > 0:
+        ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+    kv_start=0,
+) -> jax.Array:
+    """Flash-style attention, O(Tq * kv_chunk) memory.
+
+    q: (B, Tq, H, hd); k, v: (B, Tk, Hk, hd) with H % Hk == 0.
+    ``q_offset`` is the absolute position of q[0] (decode: Tk - 1).
+    ``kv_start`` masks keys at positions < kv_start (halo-attention's
+    missing-predecessor shard).
+    """
+    B, Tq, H, hd = q.shape
+    Tk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = scale if scale is not None else hd ** -0.5
+
+    nchunk = max(1, -(-Tk // kv_chunk))
+    pad = nchunk * kv_chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunk, kv_chunk, Hk, hd)
+    vc = v.reshape(B, nchunk, kv_chunk, Hk, hd)
+
+    qg = (q * scale).reshape(B, Tq, Hk, G, hd)
+    q_pos = q_offset + jnp.arange(Tq)
+
+    def step(carry, inputs):
+        o, m, l = carry  # o: (B,Tq,Hk,G,hd) f32; m,l: (B,Tq,Hk,G)
+        kci, vci, base = inputs
+        k_pos = base + jnp.arange(kv_chunk)
+        s = jnp.einsum("btkgh,bskh->btkgs", qg, kci,
+                       preferred_element_type=jnp.float32)  # (B,Tq,Hk,G,ckv)
+        ok = jnp.broadcast_to((k_pos[None, :] < Tk) &
+                              (k_pos[None, :] >= kv_start), (Tq, kv_chunk))
+        if causal:
+            ok = ok & (q_pos[:, None] >= k_pos[None, :])
+            if window > 0:
+                ok = ok & ((q_pos[:, None] - k_pos[None, :]) < window)
+        bias = jnp.where(ok, 0.0, NEG_INF)  # (Tq, ckv)
+        s = s + bias[None, :, None, None, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("btkgs,bskh->btkgh", p.astype(vci.dtype), vci,
+                        preferred_element_type=jnp.float32)
+        o_new = o * corr[..., None] + pv
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, Tq, Hk, G, hd), jnp.float32)
+    m0 = jnp.full((B, Tq, Hk, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, Hk, G), jnp.float32)
+    bases = jnp.arange(nchunk) * kv_chunk
+    # flash-attention backward: recompute each chunk's scores/probs in the
+    # VJP instead of saving (B, Tq, H, ckv) f32 tensors per chunk
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (o, m, l), _ = jax.lax.scan(
+        step, (o0, m0, l0), (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), bases)
+    )
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, kv_len: jax.Array | int,
+    window: int = 0, scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, H, hd); k/v: (B, S, Hk, hd).  Written as plain einsum +
+    softmax so the SPMD partitioner turns the S-sharded contraction into
+    partial softmax stats + a small all-reduce (distributed flash-decode).
+    """
+    B, _, H, hd = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = scale if scale is not None else hd ** -0.5
+    qg = (q * scale).reshape(B, Hk, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k, preferred_element_type=jnp.float32)
+    pos = jnp.arange(S)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    valid = pos[None, :] < kv_len[:, None]
+    if window > 0:
+        valid = valid & (pos[None, :] >= (kv_len - window)[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, stacked: int = 0, d_ff: Optional[int] = None) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    lead = ((stacked,), ("layers",)) if stacked else ((), ())
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": ParamSpec(lead[0] + (cfg.d_model, d_ff), lead[1] + ("embed", "mlp")),
+            "w_up": ParamSpec(lead[0] + (cfg.d_model, d_ff), lead[1] + ("embed", "mlp")),
+            "w_down": ParamSpec(lead[0] + (d_ff, cfg.d_model), lead[1] + ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamSpec(lead[0] + (cfg.d_model, d_ff), lead[1] + ("embed", "mlp")),
+        "b_up": ParamSpec(lead[0] + (d_ff,), lead[1] + ("mlp",), init="zeros"),
+        "w_down": ParamSpec(lead[0] + (d_ff, cfg.d_model), lead[1] + ("mlp", "embed")),
+        "b_down": ParamSpec(lead[0] + (cfg.d_model,), lead[1] + ("embed",), init="zeros"),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return jnp.einsum("...f,fd->...d", h, p["w_down"])
+    h = jnp.einsum("...d,df->...f", x, p["w_up"]) + p["b_up"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"]) + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# vocab head: loss + MCAL scoring statistics
+# ---------------------------------------------------------------------------
+
+
+class ScoreStats(NamedTuple):
+    """Per-token uncertainty statistics used by MCAL's M(.) / L(.)."""
+
+    margin: jax.Array      # top1 - top2 logit gap
+    entropy: jax.Array     # predictive entropy (nats)
+    max_logprob: jax.Array # log p(top1)  (least-confidence = 1 - exp(.))
+    top1: jax.Array        # argmax index
+
+
+def score_stats_from_logits(logits: jax.Array) -> ScoreStats:
+    """Reference implementation over materialized logits."""
+    lf = logits.astype(jnp.float32)
+    top2, idx = jax.lax.top_k(lf, 2)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    p = jnp.exp(lf - lse[..., None])
+    entropy = lse - jnp.sum(p * lf, axis=-1)
+    return ScoreStats(
+        margin=top2[..., 0] - top2[..., 1],
+        entropy=entropy,
+        max_logprob=top2[..., 0] - lse,
+        top1=idx[..., 0],
+    )
+
+
+def chunked_score_stats(hidden: jax.Array, w_vocab: jax.Array,
+                        chunk: int = 8192) -> ScoreStats:
+    """Online top-2/entropy/lse over vocab chunks without materializing
+    (T, V) logits (jnp twin of the ``margin_head`` Pallas kernel).
+
+    hidden: (..., D); w_vocab: (D, V).
+    """
+    D, V = w_vocab.shape
+    nchunk = max(1, -(-V // chunk))
+    pad = nchunk * chunk - V
+    if pad:  # dynamic_slice clamps OOB starts -> pad so chunks never clamp
+        w_vocab = jnp.pad(w_vocab, ((0, 0), (0, pad)))
+    lead = hidden.shape[:-1]
+    h2 = hidden.reshape(-1, D)
+    T = h2.shape[0]
+
+    def step(carry, i):
+        m, s, u, v1, v2, i1 = carry
+        wc = jax.lax.dynamic_slice_in_dim(w_vocab, i * chunk, chunk, axis=1)
+        x = jnp.einsum("td,dv->tv", h2, wc, preferred_element_type=jnp.float32)
+        col = i * chunk + jnp.arange(chunk)
+        x = jnp.where(col[None, :] < V, x, NEG_INF)
+        # online logsumexp + sum(x * e^x) for entropy
+        cm = jnp.max(x, axis=-1)
+        m_new = jnp.maximum(m, cm)
+        corr = jnp.exp(m - m_new)
+        e = jnp.exp(x - m_new[:, None])
+        s_new = s * corr + jnp.sum(e, axis=-1)
+        u_new = u * corr + jnp.sum(jnp.where(col[None, :] < V, x, 0.0) * e, axis=-1)
+        # online top-2: new top2 of {v1, v2, c1, c2} given v1>=v2, c1>=c2
+        c12, cidx = jax.lax.top_k(x, 2)
+        c1, c2 = c12[:, 0], c12[:, 1]
+        v1_new = jnp.maximum(v1, c1)
+        v2_new = jnp.maximum(jnp.minimum(v1, c1), jnp.maximum(v2, c2))
+        i1_new = jnp.where(c1 > v1, cidx[:, 0] + i * chunk, i1)
+        return (m_new, s_new, u_new, v1_new, v2_new, i1_new), None
+
+    init = (
+        jnp.full((T,), NEG_INF, jnp.float32),
+        jnp.zeros((T,), jnp.float32),
+        jnp.zeros((T,), jnp.float32),
+        jnp.full((T,), NEG_INF, jnp.float32),
+        jnp.full((T,), NEG_INF, jnp.float32),
+        jnp.zeros((T,), jnp.int32),
+    )
+    (m, s, u, v1, v2, i1), _ = jax.lax.scan(step, init, jnp.arange(nchunk))
+    lse = m + jnp.log(jnp.maximum(s, 1e-30))
+    entropy = lse - u / jnp.maximum(s, 1e-30)
+    stats = ScoreStats(margin=v1 - v2, entropy=entropy, max_logprob=v1 - lse, top1=i1)
+    return jax.tree.map(lambda a: a.reshape(lead), stats)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy, fp32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(hidden: jax.Array, w_vocab: jax.Array,
+                          labels: jax.Array, chunk: int = 16384,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """CE without materializing (T, V) logits: lse accumulated per vocab
+    chunk, label logit gathered on the fly.  Differentiable (scan of
+    einsums)."""
+    D, V = w_vocab.shape
+    nchunk = max(1, -(-V // chunk))
+    if nchunk * chunk != V:  # pad so dynamic_slice never clamps (see above)
+        w_vocab = jnp.pad(w_vocab, ((0, 0), (0, nchunk * chunk - V)))
+    lead = hidden.shape[:-1]
+    h2 = hidden.reshape(-1, D)
+    lab = labels.reshape(-1)
+    T = h2.shape[0]
+
+    def step(carry, i):
+        m, s, ll = carry
+        wc = jax.lax.dynamic_slice_in_dim(w_vocab, i * chunk, chunk, axis=1)
+        x = jnp.einsum("td,dv->tv", h2, wc, preferred_element_type=jnp.float32)
+        col = i * chunk + jnp.arange(chunk)
+        x = jnp.where(col[None, :] < V, x, NEG_INF)
+        cm = jnp.max(x, axis=-1)
+        m_new = jnp.maximum(m, cm)
+        s_new = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(x - m_new[:, None]), axis=-1)
+        hit = (lab[:, None] == col[None, :])
+        ll_new = ll + jnp.sum(jnp.where(hit, x, 0.0), axis=-1)
+        return (m_new, s_new, ll_new), None
+
+    # recompute each chunk's logits in the backward pass: without this the
+    # scan saves every (T, chunk) f32 logits tile for reverse-mode
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    init = (jnp.full((T,), NEG_INF, jnp.float32), jnp.zeros((T,), jnp.float32),
+            jnp.zeros((T,), jnp.float32))
+    (m, s, ll), _ = jax.lax.scan(step, init, jnp.arange(nchunk))
+    nll = (m + jnp.log(jnp.maximum(s, 1e-30))) - ll
+    nll = nll.reshape(lead)
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,50 @@
+"""Small feature-vector classifier (MLP) — the classifier family MCAL's
+*live* labeling campaigns train (the paper's CNN18/ResNet18 role at
+container scale).  Conforms to the model facade: forward -> hidden
+(B, 1, d_model); the classification head lives in ``cls_head`` like every
+other family."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    assert cfg.input_dim > 0 and cfg.num_classes > 0
+    sp: Dict = {
+        "w_in": ParamSpec((cfg.input_dim, cfg.d_model), ("embed", "mlp"),
+                          dtype=jnp.float32),
+        "b_in": ParamSpec((cfg.d_model,), ("mlp",), init="zeros",
+                          dtype=jnp.float32),
+        "blocks": {
+            "w": ParamSpec((cfg.num_layers, cfg.d_model, cfg.d_model),
+                           ("layers", "embed", "mlp"), dtype=jnp.float32),
+            "b": ParamSpec((cfg.num_layers, cfg.d_model), ("layers", "mlp"),
+                           init="zeros", dtype=jnp.float32),
+        },
+        "final_norm": L.norm_specs(cfg),
+        "cls_head": ParamSpec((cfg.d_model, cfg.num_classes),
+                              ("embed", None), dtype=jnp.float32),
+    }
+    return sp
+
+
+def forward(cfg: ModelConfig, params: Dict, features: jax.Array,
+            mesh=None) -> jax.Array:
+    """features: (B, input_dim) -> hidden (B, 1, d_model)."""
+    x = jnp.einsum("bi,id->bd", features.astype(jnp.float32), params["w_in"])
+    x = jax.nn.relu(x + params["b_in"])
+
+    def body(h, p):
+        h = jax.nn.relu(jnp.einsum("bd,de->be", h, p["w"]) + p["b"]) + h
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x[:, None, :])
+    return x

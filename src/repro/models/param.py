@@ -1,0 +1,72 @@
+"""Declarative parameter specs.
+
+Models declare their parameters as nested dicts of :class:`ParamSpec`;
+from one declaration we derive (a) real initialization, (b) abstract
+ShapeDtypeStruct trees for the dry-run, and (c) the logical-axes tree the
+sharding rules consume.  Keeps model code to pure functions over pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; None -> 1/sqrt(fan_in)
+    dtype: Any = jnp.bfloat16
+    fan_in_axes: Tuple[int, ...] = ()  # axes treated as fan-in (default: all but last)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _stddev(spec: ParamSpec) -> float:
+    if spec.scale is not None:
+        return spec.scale
+    if spec.fan_in_axes:
+        fan_in = int(np.prod([spec.shape[a] for a in spec.fan_in_axes]))
+    else:
+        fan_in = int(np.prod(spec.shape[:-1])) if len(spec.shape) > 1 else spec.shape[0]
+    return 1.0 / np.sqrt(max(fan_in, 1))
+
+
+def init_params(specs: Dict, rng: jax.Array) -> Dict:
+    """Materialize a spec tree into real arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten_with_path(specs, is_leaf=_is_spec)
+    out = []
+    for path, spec in leaves:
+        key = jax.random.fold_in(rng, abs(hash(jax.tree_util.keystr(path))) % (2**31))
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, spec.dtype)
+        else:
+            arr = (jax.random.normal(key, spec.shape, jnp.float32) * _stddev(spec)).astype(spec.dtype)
+        out.append(arr)
+    return jax.tree.unflatten(jax.tree.structure(specs, is_leaf=_is_spec), out)
+
+
+def abstract_params(specs: Dict) -> Dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def logical_axes(specs: Dict) -> Dict:
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=_is_spec)
+
+
+def param_count(specs: Dict) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=_is_spec))

@@ -1,0 +1,86 @@
+"""Family -> implementation registry + uniform model facade."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import param as P
+
+
+def get_module(cfg: ModelConfig):
+    from repro.models import encdec, hybrid, mamba2, mlp, transformer
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "ssm": mamba2,
+        "hybrid": hybrid,
+        "audio": encdec,
+        "mlp": mlp,
+    }[cfg.family]
+
+
+class Model:
+    """Thin facade: specs/init/forward/prefill/decode with a uniform batch
+    dict ({"tokens", optional "patch_embeds"/"audio_frames"})."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.mod = get_module(cfg)
+        self._specs = self.mod.specs(cfg)
+
+    # -- params ----------------------------------------------------------
+    @property
+    def specs(self) -> Dict:
+        return self._specs
+
+    def init(self, rng: jax.Array) -> Dict:
+        return P.init_params(self._specs, rng)
+
+    def abstract_params(self) -> Dict:
+        return P.abstract_params(self._specs)
+
+    def logical_axes(self) -> Dict:
+        return P.logical_axes(self._specs)
+
+    def param_count(self) -> int:
+        return P.param_count(self._specs)
+
+    # -- compute ----------------------------------------------------------
+    def _frontend(self, batch: Dict):
+        return batch.get("patch_embeds", batch.get("audio_frames"))
+
+    def forward(self, params: Dict, batch: Dict, mesh=None) -> jax.Array:
+        if self.cfg.family == "mlp":
+            return self.mod.forward(self.cfg, params, batch["features"], mesh=mesh)
+        fe = self._frontend(batch)
+        if fe is None:
+            return self.mod.forward(self.cfg, params, batch["tokens"], mesh=mesh)
+        return self.mod.forward(self.cfg, params, batch["tokens"], fe, mesh=mesh)
+
+    def prefill(self, params: Dict, batch: Dict, mesh=None):
+        fe = self._frontend(batch)
+        if fe is None:
+            return self.mod.prefill(self.cfg, params, batch["tokens"], mesh=mesh)
+        return self.mod.prefill(self.cfg, params, batch["tokens"], fe, mesh=mesh)
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array,
+                    cache_len, mesh=None):
+        return self.mod.decode_step(self.cfg, params, cache, tokens, cache_len,
+                                    mesh=mesh)
+
+    def cache_specs(self, batch: int, seq_len: int):
+        return self.mod.cache_specs(self.cfg, batch, seq_len)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return self.mod.init_cache(self.cfg, batch, seq_len)
+
+    def logits(self, params: Dict, hidden: jax.Array) -> jax.Array:
+        from repro.models import transformer as tf
+        return tf.logits_fn(self.cfg, params, hidden)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

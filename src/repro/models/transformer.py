@@ -1,0 +1,558 @@
+"""Decoder-only transformer covering the dense / moe / vlm families.
+
+One implementation, config-driven:
+  * GQA attention (optional QKV bias, RoPE, sliding window, gemma3-style
+    local:global interleave via per-layer flags in the layer scan),
+  * SwiGLU MLP or expert-parallel MoE (shard_map over the "model" axis with
+    capacity-based dispatch and a ZeRO-3-style gather of the expert-FFN
+    shard; dispatch/combine loop over k so no (n*k, D) tensor ever
+    materializes),
+  * optional stub patch-embedding frontend (VLM) and classification head
+    (MCAL labeling tasks).
+
+Layers are stacked and scanned (compile time O(1) in depth); remat policy is
+configurable (none / per-layer / chunked).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # jax >= 0.7 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig, nl: int) -> Dict:
+    """Attention params; nl == 0 -> unstacked (single shared block)."""
+    hd = cfg.resolved_head_dim
+    s, a = ((nl,), ("layers",)) if nl else ((), ())
+    sp = {
+        "norm": L.norm_specs(cfg, stacked=nl),
+        "wq": ParamSpec(s + (cfg.d_model, cfg.num_heads, hd),
+                        a + ("embed", "heads", None)),
+        "wk": ParamSpec(s + (cfg.d_model, cfg.num_kv_heads, hd),
+                        a + ("embed", "kv", None)),
+        "wv": ParamSpec(s + (cfg.d_model, cfg.num_kv_heads, hd),
+                        a + ("embed", "kv", None)),
+        "wo": ParamSpec(s + (cfg.num_heads, hd, cfg.d_model),
+                        a + ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec(s + (cfg.num_heads, hd), a + ("heads", None), init="zeros")
+        sp["bk"] = ParamSpec(s + (cfg.num_kv_heads, hd), a + ("kv", None), init="zeros")
+        sp["bv"] = ParamSpec(s + (cfg.num_kv_heads, hd), a + ("kv", None), init="zeros")
+    return sp
+
+
+def moe_specs(cfg: ModelConfig, nl: int) -> Dict:
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    sp = {
+        "router": ParamSpec((nl, D, E), ("layers", "embed", None), dtype=jnp.float32),
+        "w_gate": ParamSpec((nl, E, D, F), ("layers", "expert", "embed", "expert_mlp")),
+        "w_up": ParamSpec((nl, E, D, F), ("layers", "expert", "embed", "expert_mlp")),
+        "w_down": ParamSpec((nl, E, F, D), ("layers", "expert", "expert_mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        sp["shared"] = L.mlp_specs(cfg, stacked=nl,
+                                   d_ff=cfg.num_shared_experts * cfg.d_ff)
+    return sp
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    nl = cfg.num_layers
+    sp: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "blocks": {
+            "attn": attention_specs(cfg, nl),
+            "mlp_norm": L.norm_specs(cfg, stacked=nl),
+            "mlp": moe_specs(cfg, nl) if cfg.family == "moe" else L.mlp_specs(cfg, stacked=nl),
+        },
+        "final_norm": L.norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.num_classes:
+        sp["cls_head"] = ParamSpec((cfg.d_model, cfg.num_classes), ("embed", None))
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# MoE block
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn(cfg: ModelConfig, p: Dict, buf: jax.Array,
+                axis_data: Optional[str]) -> jax.Array:
+    """SwiGLU expert FFN over bucketed tokens buf (E_loc, cap, D).
+
+    When the expert-FFN dim F is sharded over ``axis_data`` (ZeRO-3), two
+    routes: "gather" re-gathers the F shards per use (optionally int8 —
+    see EXPERIMENTS §Perf Cell C); "psum" computes with the local F slice
+    (SwiGLU is elementwise in F) and psums the partial down-projection —
+    token-bytes on the wire instead of weight-bytes.  NOTE: "psum" is only
+    valid when every ``axis_data`` rank holds the SAME tokens (replicated);
+    with data-sharded tokens (the a2a route) it would sum unrelated
+    tokens' outputs — use "gather" there.
+    """
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    if axis_data is not None and cfg.moe_ffn_mode == "gather":
+        def gather(w, ax):
+            if cfg.moe_gather_dtype == "int8":
+                # Forward: quantize the local shard against a per-expert
+                # global scale (one tiny pmax) and gather int8 — the wire
+                # halves vs bf16.  Backward: the exact transpose of a tiled
+                # all-gather (psum_scatter), unquantized.
+                @jax.custom_vjp
+                def q_gather(x):
+                    smax = jax.lax.pmax(
+                        jnp.max(jnp.abs(x.astype(jnp.float32)),
+                                axis=(1, 2), keepdims=True), axis_data)
+                    scale = smax / 127.0 + 1e-12
+                    q8 = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                                  -127, 127).astype(jnp.int8)
+                    qg = jax.lax.all_gather(q8, axis_data, axis=ax,
+                                            tiled=True)
+                    return (qg.astype(jnp.float32) * scale).astype(x.dtype)
+
+                dtype = w.dtype  # static via closure (not a JAX residual)
+
+                def _fwd(x):
+                    return q_gather(x), ()
+
+                def _bwd(_, g):
+                    return (jax.lax.psum_scatter(
+                        g, axis_data, scatter_dimension=ax,
+                        tiled=True).astype(dtype),)
+
+                q_gather.defvjp(_fwd, _bwd)
+                return q_gather(w)
+            return jax.lax.all_gather(w, axis_data, axis=ax, tiled=True)
+
+        w_gate = gather(w_gate, 2)
+        w_up = gather(w_up, 2)
+        w_down = gather(w_down, 1)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down)
+    if axis_data is not None and cfg.moe_ffn_mode == "psum":
+        out_buf = jax.lax.psum(out_buf.astype(jnp.float32),
+                               axis_data).astype(buf.dtype)
+    return out_buf
+
+
+def _bucket_by(ids: jax.Array, n_buckets: int, cap: int):
+    """Scatter positions for copies with bucket `ids` (invalid == n_buckets).
+    Returns (bucket, slot, keep): slot < cap kept; rest dropped."""
+    onehot = jax.nn.one_hot(ids, n_buckets + 1, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    keep = (ids < n_buckets) & (pos < cap)
+    return jnp.where(keep, ids, 0), jnp.where(keep, pos, cap), keep
+
+
+def _moe_local(cfg: ModelConfig, p: Dict, x: jax.Array, e0,
+               n_local_experts: int, axis_data: Optional[str]) -> jax.Array:
+    """Per-device MoE over x (n, D); local experts [e0, e0 + E_loc)."""
+    n, D = x.shape
+    E = cfg.num_experts
+    k = min(cfg.experts_per_token, E)
+    router_logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (n, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # buffer slot assignment: global cumsum over all n*k assignments
+    flat_e = top_e.reshape(-1) - e0                              # (n*k,)
+    mine = (flat_e >= 0) & (flat_e < n_local_experts)
+    flat_e = jnp.where(mine, flat_e, n_local_experts)            # trash bucket
+    cap = int(np.ceil(n * k / E * cfg.moe_capacity_factor))
+    cap = max(min(cap, n * k), min(n * k, 16))
+    dest_e, dest_c, keep = _bucket_by(flat_e, n_local_experts, cap)
+    dest_e = dest_e.reshape(n, k)
+    dest_c = dest_c.reshape(n, k)                                # cap == trash
+    keep = keep.reshape(n, k)
+
+    # dispatch: loop over k so only (n, D)-sized scatters materialize
+    buf = jnp.zeros((n_local_experts, cap + 1, D), x.dtype)
+    for j in range(k):
+        vals = jnp.where(keep[:, j][:, None], x, 0)
+        buf = buf.at[dest_e[:, j], dest_c[:, j]].add(vals)
+    buf = buf[:, :cap]
+
+    out_buf = _expert_ffn(cfg, p, buf, axis_data)                # (E_loc, cap, D)
+
+    out = jnp.zeros((n, D), jnp.float32)
+    for j in range(k):
+        rows = out_buf[dest_e[:, j], jnp.minimum(dest_c[:, j], cap - 1)]
+        w = jnp.where(keep[:, j], top_p[:, j], 0.0).astype(jnp.float32)
+        out = out + rows.astype(jnp.float32) * w[:, None]
+    return out.astype(x.dtype)
+
+
+def _moe_a2a(cfg: ModelConfig, p: Dict, x: jax.Array, tp: int,
+             axis_model: str, axis_data: Optional[str]) -> jax.Array:
+    """Token-routing expert parallelism (EP): tokens are all-to-all'd to
+    the model-rank owning their routed expert, computed there, and
+    all-to-all'd back — token-bytes move instead of expert-weight-bytes
+    (EXPERIMENTS §Perf Cell C it-2).  x: (n_loc, D) UNIQUE tokens per
+    device (sharded over the model axis too, unlike the replicate+psum
+    route)."""
+    n, D = x.shape
+    E = cfg.num_experts
+    k = min(cfg.experts_per_token, E)
+    e_loc = E // tp
+
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # (n, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # --- dispatch: bucket copies by destination rank -----------------------
+    flat_e = top_e.reshape(-1)                                   # (n*k,)
+    dst = flat_e // e_loc                                        # rank id
+    cap_s = int(np.ceil(n * k / tp * cfg.moe_capacity_factor))
+    cap_s = max(min(cap_s, n * k), min(n * k, 16))
+    dest_r, dest_c, keep = _bucket_by(dst, tp, cap_s)
+    send_x = jnp.zeros((tp, cap_s + 1, D), x.dtype)
+    send_le = jnp.full((tp, cap_s + 1), e_loc, jnp.int32)        # E_loc==pad
+    le = jnp.where(keep, flat_e % e_loc, e_loc)
+    kr = dest_r.reshape(n, k)
+    kc = dest_c.reshape(n, k)
+    km = keep.reshape(n, k)
+    lek = le.reshape(n, k)
+    for j in range(k):
+        vals = jnp.where(km[:, j][:, None], x, 0)
+        send_x = send_x.at[kr[:, j], kc[:, j]].add(vals)
+        send_le = send_le.at[kr[:, j], kc[:, j]].min(lek[:, j])
+    send_x, send_le = send_x[:, :cap_s], send_le[:, :cap_s]
+
+    recv_x = jax.lax.all_to_all(send_x, axis_model, 0, 0, tiled=True)
+    recv_le = jax.lax.all_to_all(send_le, axis_model, 0, 0, tiled=True)
+
+    # --- local expert compute on received copies ---------------------------
+    m = tp * cap_s
+    rle = recv_le.reshape(m)
+    cap_e = int(np.ceil(m / max(e_loc, 1) * cfg.moe_capacity_factor))
+    cap_e = max(min(cap_e, m), min(m, 16))
+    be, bc, bkeep = _bucket_by(rle, e_loc, cap_e)
+    buf = jnp.zeros((e_loc, cap_e + 1, D), x.dtype)
+    buf = buf.at[be, bc].add(
+        jnp.where(bkeep[:, None], recv_x.reshape(m, D), 0))
+    out_buf = _expert_ffn(cfg, p, buf[:, :cap_e], axis_data)
+
+    # --- route results back -------------------------------------------------
+    ret = out_buf[be, jnp.minimum(bc, cap_e - 1)]
+    ret = jnp.where(bkeep[:, None], ret, 0).reshape(tp, cap_s, D)
+    back = jax.lax.all_to_all(ret, axis_model, 0, 0, tiled=True)
+
+    out = jnp.zeros((n, D), jnp.float32)
+    for j in range(k):
+        rows = back[kr[:, j], jnp.minimum(kc[:, j], cap_s - 1)]
+        w = jnp.where(km[:, j], top_p[:, j], 0.0).astype(jnp.float32)
+        out = out + rows.astype(jnp.float32) * w[:, None]
+    return out.astype(x.dtype)
+
+
+def moe_block(cfg: ModelConfig, p: Dict, x: jax.Array, mesh=None) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  Experts sharded over "model"."""
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+    if int(np.prod(list(sizes.values()) or [1])) == 1:
+        out = _moe_local(cfg, p, xf, 0, cfg.num_experts, None)
+    else:
+        tp = sizes.get("model", 1)
+        assert cfg.num_experts % tp == 0, (cfg.num_experts, tp)
+        e_loc = cfg.num_experts // tp
+        axis_data = "data" if sizes.get("data", 1) > 1 else None
+        batch_axes = tuple(a for a in ("pod", "data") if sizes.get(a, 1) > 1)
+        wspec_ff = P("model", None, axis_data)
+        wspec_down = P("model", axis_data, None)
+        n_rows = xf.shape[0]
+        use_a2a = (cfg.moe_route == "a2a" and tp > 1 and
+                   n_rows % (tp * max(np.prod([sizes[a] for a in batch_axes],
+                                              dtype=int), 1)) == 0)
+
+        if use_a2a:
+            # token-routing EP: tokens sharded over "model" too; each copy
+            # travels to its expert's owner and back (§Perf Cell C it-2)
+            tok_axes = batch_axes + ("model",)
+
+            def body(xl, router, wg, wu, wd):
+                pl = {"router": router, "w_gate": wg, "w_up": wu,
+                      "w_down": wd}
+                return _moe_a2a(cfg, pl, xl, tp, "model", axis_data)
+
+            out = _shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P(tok_axes, None), P(None, None),
+                          wspec_ff, wspec_ff, wspec_down),
+                out_specs=P(tok_axes, None),
+            )(xf, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+        else:
+            def body(xl, router, wg, wu, wd):
+                e0 = jax.lax.axis_index("model") * e_loc if tp > 1 else 0
+                pl = {"router": router, "w_gate": wg, "w_up": wu,
+                      "w_down": wd}
+                out = _moe_local(cfg, pl, xl, e0, e_loc, axis_data)
+                if tp > 1:
+                    out = jax.lax.psum(out, "model")
+                return out
+
+            out = _shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P(batch_axes or None, None), P(None, None),
+                          wspec_ff, wspec_ff, wspec_down),
+                out_specs=P(batch_axes or None, None),
+            )(xf, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    out = out.reshape(B, S, D)
+    if cfg.num_shared_experts:
+        out = out + L.apply_mlp(cfg, p["shared"], x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# transformer blocks (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array,
+         mesh=None):
+    from repro.distributed.sharding import constrain
+    xn = L.apply_norm(cfg, p["norm"], x)
+    q = jnp.einsum("btd,dnh->btnh", xn, p["wq"])
+    kk = jnp.einsum("btd,dnh->btnh", xn, p["wk"])
+    vv = jnp.einsum("btd,dnh->btnh", xn, p["wv"])
+    if cfg.qkv_bias:
+        q, kk, vv = q + p["bq"], kk + p["bk"], vv + p["bv"]
+    if cfg.pos_embed == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        kk = L.apply_rope(kk, positions, cfg.rope_theta)
+    # pin batch/head shardings so SPMD propagation never un-shards the
+    # batch inside the scanned + rematted block (see DESIGN.md)
+    q = constrain(q, mesh, cfg.sharding, "batch", "seq", "heads", None)
+    kk = constrain(kk, mesh, cfg.sharding, "batch", "seq", "kv", None)
+    vv = constrain(vv, mesh, cfg.sharding, "batch", "seq", "kv", None)
+    return q, kk, vv
+
+
+def _block(cfg: ModelConfig, p: Dict, x: jax.Array, *, positions: jax.Array,
+           is_global: jax.Array, mesh=None, kv_chunk: int = 1024,
+           with_cache: bool = False):
+    from repro.distributed.sharding import constrain, mesh_axis_sizes
+    x = constrain(x, mesh, cfg.sharding, "batch", "seq", "act_embed")
+    q, kk, vv = _qkv(cfg, p["attn"], x, positions, mesh=mesh)
+    T = x.shape[1]
+    ck = min(kv_chunk, T,
+             L.pick_kv_chunk(x.shape[0], T, cfg.num_heads))
+    # seq_serve + sliding window: exchange a window-sized halo instead of
+    # gathering the whole sequence-sharded K/V (EXPERIMENTS §Perf Cell B)
+    use_halo = False
+    if mesh is not None and cfg.sharding == "seq_serve" and \
+            cfg.sliding_window > 0:
+        tp = mesh_axis_sizes(mesh).get("model", 1)
+        use_halo = tp > 1 and T % tp == 0 and cfg.sliding_window <= T // tp
+
+    def local_attn(a):
+        if use_halo:
+            from repro.serving.halo_attention import halo_window_attention
+            return halo_window_attention(
+                *a, window=cfg.sliding_window, mesh=mesh, axis="model",
+                batch_axes=("pod", "data"))
+        return L.blockwise_attention(*a, causal=True,
+                                     window=cfg.sliding_window, kv_chunk=ck)
+
+    if cfg.local_global_ratio and cfg.sliding_window:
+        attn_out = jax.lax.cond(
+            is_global,
+            lambda a: L.blockwise_attention(*a, causal=True, window=0, kv_chunk=ck),
+            local_attn,
+            (q, kk, vv),
+        )
+    else:
+        attn_out = local_attn((q, kk, vv)) if cfg.sliding_window > 0 else \
+            L.blockwise_attention(q, kk, vv, causal=True, kv_chunk=ck)
+    x = x + jnp.einsum("btnh,nhd->btd", attn_out, p["attn"]["wo"])
+    x = constrain(x, mesh, cfg.sharding, "batch", "seq", "act_embed")
+    xn = L.apply_norm(cfg, p["mlp_norm"], x)
+    if cfg.family == "moe":
+        x = x + moe_block(cfg, p["mlp"], xn, mesh=mesh)
+    else:
+        x = x + L.apply_mlp(cfg, p["mlp"], xn)
+    x = constrain(x, mesh, cfg.sharding, "batch", "seq", "act_embed")
+    cache = {"k": kk.astype(cfg.jnp_dtype), "v": vv.astype(cfg.jnp_dtype)} if with_cache else None
+    return x, cache
+
+
+def _layer_flags(cfg: ModelConfig) -> jax.Array:
+    """is_global flag per layer (gemma3 5:1 pattern; all-global otherwise)."""
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio + 1
+        return jnp.array([(i % r) == (r - 1) for i in range(cfg.num_layers)])
+    return jnp.ones((cfg.num_layers,), bool)
+
+
+def _scan_blocks(cfg: ModelConfig, params: Dict, x: jax.Array,
+                 positions: jax.Array, mesh=None, with_cache: bool = False):
+    flags = _layer_flags(cfg)
+    blocks = params["blocks"]
+
+    def body(h, layer):
+        p, flag = layer
+        out, cache = _block(cfg, p, h, positions=positions, is_global=flag,
+                            mesh=mesh, with_cache=with_cache)
+        return out, cache
+
+    if cfg.remat == "chunk" and cfg.remat_chunk > 1 and cfg.scan_layers:
+        k = cfg.remat_chunk
+        nl = cfg.num_layers
+        assert nl % k == 0, (nl, k)
+
+        def chunk_body(h, chunk):
+            h, caches = jax.lax.scan(body, h, chunk)
+            return h, caches
+
+        chunk_body = jax.checkpoint(chunk_body,
+                                    policy=jax.checkpoint_policies.nothing_saveable)
+        reshaped = jax.tree.map(lambda a: a.reshape((nl // k, k) + a.shape[1:]), blocks)
+        rflags = flags.reshape(nl // k, k)
+        x, caches = jax.lax.scan(chunk_body, x, (reshaped, rflags))
+        if with_cache:
+            caches = jax.tree.map(
+                lambda a: a.reshape((nl,) + a.shape[2:]), caches)
+    elif cfg.scan_layers:
+        if cfg.remat == "layer":
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, caches = jax.lax.scan(body, x, (blocks, flags))
+    else:
+        caches_list = []
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+            if cfg.remat == "layer" else body
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda a: a[i], blocks)
+            x, c = fn(x, (p_i, flags[i]))
+            caches_list.append(c)
+        caches = jax.tree.map(lambda *cs: jnp.stack(cs), *caches_list) if with_cache else None
+    return x, (caches if with_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                 patch_embeds: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if patch_embeds is not None:  # VLM stub frontend: prepend patch tokens
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            patch_embeds: Optional[jax.Array] = None, mesh=None) -> jax.Array:
+    """Full-sequence forward -> final hidden states (B, T, D)."""
+    x = embed_tokens(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1])
+    x, _ = _scan_blocks(cfg, params, x, positions, mesh=mesh)
+    return L.apply_norm(cfg, params["final_norm"], x)
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            patch_embeds: Optional[jax.Array] = None, mesh=None):
+    """Full-sequence forward that also emits the stacked KV cache
+    (L, B, T, Hk, hd) — the inference-prefill step."""
+    x = embed_tokens(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1])
+    x, caches = _scan_blocks(cfg, params, x, positions, mesh=mesh, with_cache=True)
+    hidden = L.apply_norm(cfg, params["final_norm"], x)
+    return hidden, caches
+
+
+def lm_head_weight(cfg: ModelConfig, params: Dict) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def logits_fn(cfg: ModelConfig, params: Dict, hidden: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", hidden, lm_head_weight(cfg, params))
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """Abstract KV cache + logical axes (for dry-run + serving init)."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, seq_len, cfg.num_kv_heads, hd)
+    logical = ("layers", "cache_batch", "cache_seq", "kv", None)
+    struct = jax.ShapeDtypeStruct(shape, cfg.jnp_dtype)
+    return ({"k": struct, "v": struct}, {"k": logical, "v": logical})
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    ab, _ = cache_specs(cfg, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jax.Array, cache_len: jax.Array, mesh=None
+                ) -> Tuple[jax.Array, Dict]:
+    """One decode step.  tokens: (B, 1); cache k/v: (L, B, S, Hk, hd)."""
+    x = embed_tokens(cfg, params, tokens)
+    positions = cache_len + jnp.arange(x.shape[1])
+    flags = _layer_flags(cfg)
+
+    def body(h, layer):
+        p, flag, c = layer
+        q, kk, vv = _qkv(cfg, p["attn"], h, positions)
+        k_cache = jax.lax.dynamic_update_slice(
+            c["k"], kk.astype(c["k"].dtype), (0, cache_len, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            c["v"], vv.astype(c["v"].dtype), (0, cache_len, 0, 0))
+        if cfg.local_global_ratio and cfg.sliding_window:
+            out = jax.lax.cond(
+                flag,
+                lambda: L.decode_attention(q, k_cache, v_cache, kv_len=cache_len + 1),
+                lambda: L.decode_attention(q, k_cache, v_cache, kv_len=cache_len + 1,
+                                           window=cfg.sliding_window),
+            )
+        else:
+            out = L.decode_attention(q, k_cache, v_cache, kv_len=cache_len + 1,
+                                     window=cfg.sliding_window)
+        h = h + jnp.einsum("btnh,nhd->btd", out, p["attn"]["wo"])
+        xn2 = L.apply_norm(cfg, p["mlp_norm"], h)
+        if cfg.family == "moe":
+            h = h + moe_block(cfg, p["mlp"], xn2, mesh=mesh)
+        else:
+            h = h + L.apply_mlp(cfg, p["mlp"], xn2)
+        return h, {"k": k_cache, "v": v_cache}
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], flags, cache))
+    hidden = L.apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, hidden[:, -1:, :])
+    return logits, new_cache

@@ -1,0 +1,111 @@
+"""Batched serving engine: prefill + decode with sharded KV/SSM caches.
+
+MCAL's machine-labeling pass is an inference job over the whole remaining
+pool; this engine is that job's runtime.  It also provides the
+``serve_step`` the multi-pod dry-run lowers for the decode_* / long_*
+shape cells: one new token against a KV cache of ``seq_len``.
+
+Sharding: cache batch over ("pod", "data"), heads over "model"; for
+long-context cells the cache sequence dim is sharded over the mesh and
+``decode_attention``'s softmax lowers to partial stats + a small
+all-reduce (distributed flash-decode) under the SPMD partitioner.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.registry import Model
+
+
+def make_prefill_step(model: Model, mesh=None, policy: str = "tp"):
+    """jitted (params, batch) -> (last_logits, cache)."""
+
+    def step(params, batch):
+        hidden, cache = model.prefill(params, batch, mesh=mesh)
+        logits = model.logits(params, hidden[:, -1:, :])
+        return logits, cache
+
+    if mesh is None:
+        return jax.jit(step)
+    ab_p, lg_p = model.abstract_params(), model.logical_axes()
+    p_sh = shd.tree_named(mesh, shd.tree_pspecs(ab_p, lg_p, mesh, policy))
+    return jax.jit(step, in_shardings=(p_sh, None))
+
+
+def make_decode_step(model: Model, mesh=None, policy: str = "tp",
+                     donate_cache: bool = True):
+    """jitted (params, cache, tokens, cache_len) -> (logits, new_cache)."""
+
+    def step(params, cache, tokens, cache_len):
+        return model.decode_step(params, cache, tokens, cache_len, mesh=mesh)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,) if donate_cache else ())
+    ab_p, lg_p = model.abstract_params(), model.logical_axes()
+    p_sh = shd.tree_named(mesh, shd.tree_pspecs(ab_p, lg_p, mesh, policy))
+    return jax.jit(step, in_shardings=(p_sh, None, None, None),
+                   donate_argnums=(1,) if donate_cache else ())
+
+
+class ServeEngine:
+    """Minimal batched generation/scoring loop over a fixed-size cache."""
+
+    def __init__(self, model: Model, params: Dict, max_seq: int,
+                 batch_size: int, mesh=None, policy: str = "tp"):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.batch_size = batch_size
+        self.mesh = mesh
+        self._prefill = make_prefill_step(model, mesh, policy)
+        self._decode = make_decode_step(model, mesh, policy)
+
+    def prefill(self, batch: Dict) -> Tuple[jax.Array, Dict, int]:
+        logits, cache = self._prefill(self.params, batch)
+        T = batch["tokens"].shape[1]
+        full = self.model.init_cache(self.batch_size, self.max_seq)
+        full = _load_cache(self.model.cfg, full, cache)
+        return logits, full, T
+
+    def generate(self, batch: Dict, steps: int,
+                 sampler: str = "greedy") -> jax.Array:
+        logits, cache, pos = self.prefill(batch)
+        toks = []
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        for i in range(steps):
+            toks.append(tok)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(pos + i))
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(toks, axis=1)
+
+
+def _load_cache(cfg: ModelConfig, full, prefix):
+    """Copy a prefill cache into the zero-initialized max_seq cache."""
+    if cfg.family == "ssm":
+        return prefix
+    if cfg.family == "hybrid":
+        out = dict(full)
+        out["ssm"] = prefix["ssm"]
+        out["attn"] = {
+            k: jax.lax.dynamic_update_slice(
+                full["attn"][k], prefix["attn"][k].astype(full["attn"][k].dtype),
+                (0,) * full["attn"][k].ndim)
+            for k in ("k", "v")}
+        return out
+    if cfg.family == "audio":
+        out = {k: jax.lax.dynamic_update_slice(
+            full[k], prefix[k].astype(full[k].dtype), (0,) * full[k].ndim)
+            for k in ("k", "v")}
+        out["xk"], out["xv"] = prefix["xk"], prefix["xv"]
+        return out
+    return {k: jax.lax.dynamic_update_slice(
+        full[k], prefix[k].astype(full[k].dtype), (0,) * full[k].ndim)
+        for k in ("k", "v")}

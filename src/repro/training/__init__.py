@@ -1,0 +1,1 @@
+from repro.training import optimizer, schedules, train_loop  # noqa: F401

@@ -1,0 +1,88 @@
+"""Compressed data-parallel train step: int8 error-feedback gradient
+all-reduce (the slow-axis trick for the pod interconnect).
+
+``make_compressed_dp_train_step`` builds a shard_map-based DP step:
+params/optimizer replicated, batch sharded over the DP axes, per-shard
+gradients reduced with :func:`repro.distributed.compression.compressed_psum`
+over ``compress_axis`` (int8 payload + one f32 scale on the wire — 4x less
+than f32, 2x less than bf16) and plain psum over the remaining DP axes.
+The quantization residual (error-feedback state, one f32 tree per shard)
+rides in the train state, keeping the scheme unbiased over steps.
+
+This is the pure-DP replicated-parameter regime (small/medium models, e.g.
+the `fsdp`-policy winners of EXPERIMENTS §Perf with replication instead of
+ZeRO); for sharded-parameter regimes the compression applies to the
+reduce-scatter in the same way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.training import optimizer as opt
+from repro.training.schedules import make_schedule
+from repro.training.train_loop import loss_fn
+
+
+def init_ef_state(params) -> Dict:
+    """Per-shard f32 residual tree (replicated layout, per-device values)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_compressed_dp_train_step(model, tc: TrainConfig, mesh,
+                                  compress_axis: str = "data",
+                                  plain_axes: Tuple[str, ...] = ()):
+    """-> step((state, ef), batch) -> ((state, ef), metrics).
+
+    ``state`` is the usual {params, opt, step} (replicated); ``ef`` the
+    error-feedback tree.  Batch leaves are sharded over
+    (compress_axis, *plain_axes) on dim 0.
+    """
+    from repro.distributed.compression import tree_compressed_psum
+    sched = make_schedule(tc)
+    dp_axes = (compress_axis,) + tuple(plain_axes)
+
+    def body(params, slots, stepc, ef, batch):
+        loss, grads = jax.value_and_grad(
+            functools.partial(loss_fn, model))(params, batch)
+        # int8 + EF over the slow axis; exact psum over the rest
+        grads, new_ef = tree_compressed_psum(grads, ef, compress_axis)
+        for ax in plain_axes:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, ax), grads)
+        loss = jax.lax.pmean(loss, dp_axes)
+        grads, gnorm = opt.clip_by_global_norm(grads, tc.grad_clip)
+        lr = sched(stepc)
+        new_params, new_slots = opt.adamw_update(
+            params, grads, slots, stepc, lr, tc)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "lr": lr}
+        return new_params, new_slots, stepc + 1, new_ef, metrics
+
+    batch_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    mapped = _shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), batch_spec),
+        out_specs=(P(), P(), P(), P(), P()),
+        check_vma=False,  # outputs are provably replicated via the psum
+    )
+
+    @jax.jit
+    def step(carry, batch):
+        state, ef = carry
+        new_p, new_s, new_step, new_ef, metrics = mapped(
+            state["params"], state["opt"], state["step"], ef, batch)
+        return ({"params": new_p, "opt": new_s, "step": new_step},
+                new_ef), metrics
+
+    return step

@@ -1,0 +1,170 @@
+"""AdamW in pure JAX with giant-model memory levers.
+
+Per-leaf optimizer slots (a list aligned with ``jax.tree.leaves(params)``):
+
+* first moment ``m`` stored in ``moment_dtype`` — float32 / bfloat16 / int8
+  (int8 uses symmetric per-tensor scaling, requantized each step);
+* second moment either full ``v`` or Adafactor-style factored ``(vr, vc)``
+  over the last two axes for >=2-D leaves (leading stack axes stay batched);
+* 1-D leaves (norm scales, biases) are never weight-decayed or factored.
+
+The slot layout is declared once (:func:`slot_spec`) so the dry-run can build
+abstract state + logical shardings without allocating anything: slots inherit
+their parameter's logical axes, which under ``fsdp_tp`` shards optimizer
+state like the weights (ZeRO-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+
+# Minimum size of each of the last two dims for factoring to pay off.
+_FACTOR_MIN = 8
+
+
+def _factorable(shape: Tuple[int, ...]) -> bool:
+    return len(shape) >= 2 and shape[-1] >= _FACTOR_MIN and shape[-2] >= _FACTOR_MIN
+
+
+def _decayed(shape: Tuple[int, ...]) -> bool:
+    return len(shape) >= 2
+
+
+# ---------------------------------------------------------------------------
+# int8 moment quantization (symmetric, per-tensor scale)
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_int8(slot: Dict[str, jax.Array]) -> jax.Array:
+    return slot["q"].astype(jnp.float32) * slot["scale"]
+
+
+# ---------------------------------------------------------------------------
+# slot construction
+# ---------------------------------------------------------------------------
+
+
+def slot_spec(shape: Tuple[int, ...], logical: Tuple, tc: TrainConfig):
+    """Describe the slot arrays for one parameter leaf.
+
+    Returns {name: (shape, dtype, logical)}.
+    """
+    out: Dict[str, Tuple[Tuple[int, ...], Any, Tuple]] = {}
+    if tc.moment_dtype == "int8":
+        out["m_q"] = (shape, jnp.int8, logical)
+        out["m_scale"] = ((), jnp.float32, ())
+    else:
+        mdt = jnp.float32 if tc.moment_dtype == "float32" else jnp.bfloat16
+        out["m"] = (shape, mdt, logical)
+    if tc.factored_second_moment and _factorable(shape):
+        out["vr"] = (shape[:-1], jnp.float32, logical[:-1])
+        out["vc"] = (shape[:-2] + shape[-1:], jnp.float32, logical[:-2] + logical[-1:])
+    else:
+        out["v"] = (shape, jnp.float32, logical)
+    return out
+
+
+def init_slots(params_leaves: Sequence[jax.Array], tc: TrainConfig) -> List[Dict]:
+    slots = []
+    for p in params_leaves:
+        spec = slot_spec(p.shape, (None,) * p.ndim, tc)
+        slots.append({k: jnp.zeros(sh, dt) for k, (sh, dt, _) in spec.items()})
+    return slots
+
+
+def abstract_slots(param_specs: Sequence[Tuple[Tuple[int, ...], Tuple]],
+                   tc: TrainConfig):
+    """(shape, logical) per leaf -> (abstract slots, logical slots)."""
+    ab, lg = [], []
+    for shape, logical in param_specs:
+        spec = slot_spec(shape, logical, tc)
+        ab.append({k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt, _) in spec.items()})
+        lg.append({k: axes for k, (_, _, axes) in spec.items()})
+    return ab, lg
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+
+def _get_m(slot: Dict) -> jax.Array:
+    if "m_q" in slot:
+        return dequantize_int8({"q": slot["m_q"], "scale": slot["m_scale"]})
+    return slot["m"].astype(jnp.float32)
+
+
+def _put_m(slot: Dict, m: jax.Array, tc: TrainConfig) -> None:
+    if tc.moment_dtype == "int8":
+        q = quantize_int8(m)
+        slot["m_q"], slot["m_scale"] = q["q"], q["scale"]
+    elif tc.moment_dtype == "bfloat16":
+        slot["m"] = m.astype(jnp.bfloat16)
+    else:
+        slot["m"] = m
+
+
+def _second_moment(slot: Dict, g2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Update second-moment slot in place; return the dense estimate."""
+    if "v" in slot:
+        v = b2 * slot["v"] + (1.0 - b2) * g2
+        slot["v"] = v
+        return v
+    # Adafactor-style factored estimate over the last two axes
+    vr = b2 * slot["vr"] + (1.0 - b2) * jnp.mean(g2, axis=-1)
+    vc = b2 * slot["vc"] + (1.0 - b2) * jnp.mean(g2, axis=-2)
+    slot["vr"], slot["vc"] = vr, vc
+    denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+    return vr[..., None] * vc[..., None, :] / denom[..., None]
+
+
+def adamw_update(params, grads, slots: List[Dict], step: jax.Array,
+                 lr: jax.Array, tc: TrainConfig):
+    """One AdamW step.  ``slots`` is leaf-aligned with ``params``."""
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = jax.tree.leaves(grads)
+    assert len(p_leaves) == len(g_leaves) == len(slots)
+    b1, b2 = jnp.float32(tc.beta1), jnp.float32(tc.beta2)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    new_p, new_slots = [], []
+    for p, g, slot in zip(p_leaves, g_leaves, slots):
+        slot = dict(slot)
+        gf = g.astype(jnp.float32)
+        m = b1 * _get_m(slot) + (1.0 - b1) * gf
+        _put_m(slot, m, tc)
+        v = _second_moment(slot, gf * gf, b2)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + tc.eps)
+        if tc.weight_decay and _decayed(p.shape):
+            update = update + tc.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+        new_slots.append(slot)
+    return jax.tree.unflatten(treedef, new_p), new_slots
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    if max_norm <= 0:
+        return grads, gnorm
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+                        grads), gnorm
+
+
+def slot_bytes(slots: List[Dict]) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for s in slots for a in s.values())

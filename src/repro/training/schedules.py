@@ -1,0 +1,46 @@
+"""Learning-rate schedules.
+
+``paper_steps`` reproduces the paper's recipe (§5): 200 epochs with 10x LR
+reductions at epochs 80/120/160/180 — expressed as fractions of
+``total_steps`` (0.4 / 0.6 / 0.8 / 0.9) so it applies at any step budget.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+PAPER_BOUNDARIES = (0.4, 0.6, 0.8, 0.9)  # epochs 80/120/160/180 of 200
+PAPER_DECAY = 0.1
+
+
+def make_schedule(tc: TrainConfig) -> Callable:
+    """step (int array) -> lr (f32 array)."""
+    base = tc.learning_rate
+    total = max(tc.total_steps, 1)
+
+    def warmup_scale(step):
+        if tc.warmup_steps <= 0:
+            return 1.0
+        return jnp.minimum((step + 1) / tc.warmup_steps, 1.0)
+
+    if tc.schedule == "constant":
+        def fn(step):
+            return jnp.asarray(base, jnp.float32) * warmup_scale(step)
+    elif tc.schedule == "cosine":
+        def fn(step):
+            frac = jnp.clip(step / total, 0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+            lr = base * (0.1 + 0.9 * cos)  # decay to 10% of peak
+            return jnp.asarray(lr, jnp.float32) * warmup_scale(step)
+    elif tc.schedule == "paper_steps":
+        bounds = jnp.asarray([b * total for b in PAPER_BOUNDARIES])
+
+        def fn(step):
+            k = jnp.sum(step >= bounds)
+            return jnp.asarray(base * PAPER_DECAY ** k, jnp.float32) * warmup_scale(step)
+    else:
+        raise ValueError(f"unknown schedule {tc.schedule!r}")
+    return fn

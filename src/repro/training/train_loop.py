@@ -1,0 +1,164 @@
+"""Train-step factory + train state.
+
+``make_train_step`` builds a jitted ``(state, batch) -> (state, metrics)``
+closure for any model in the zoo (LM loss over tokens/labels, or a
+classification head when ``cfg.num_classes`` is set — the path MCAL's live
+labeling campaigns use).  ``make_sharded_train_step`` is the pjit variant the
+launcher and the multi-pod dry-run consume: state/batch shardings are derived
+from the logical-axis trees, optimizer slots inherit their parameter's axes
+(ZeRO), and the same closure lowers unchanged on 1 CPU device or 512 chips.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import transformer as tf
+from repro.models.param import ParamSpec, _is_spec
+from repro.training import optimizer as opt
+from repro.training.schedules import make_schedule
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(model, params: Dict, batch: Dict, mesh=None) -> jax.Array:
+    cfg = model.cfg
+    hidden = model.forward(params, batch, mesh=mesh)
+    if cfg.num_classes:
+        pooled = jnp.mean(hidden.astype(jnp.float32), axis=1)
+        logits = jnp.einsum("bd,dc->bc", pooled.astype(hidden.dtype),
+                            params["cls_head"])
+        return L.cross_entropy(logits, batch["labels"])
+    w = tf.lm_head_weight(cfg, params)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and cfg.frontend_tokens:
+        hidden = hidden[:, cfg.frontend_tokens:, :]  # loss on text positions
+    hidden = shd.constrain(hidden, mesh, cfg.sharding,
+                           "batch", "seq", "act_embed")
+    # When the mesh shards the vocab ("model" axis divides V), materialized
+    # vocab-sharded logits + psum'd softmax stats is the cheap TP path:
+    # per-device logits are (B_loc, T, V/tp) and the chunked scan's
+    # dynamic-slice (which would all-gather the sharded head) is avoided.
+    tp = 1
+    if mesh is not None:
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.logits_chunk and (tp <= 1 or cfg.vocab_size % tp != 0):
+        return L.chunked_cross_entropy(hidden, w, labels, chunk=cfg.logits_chunk)
+    logits = jnp.einsum("btd,dv->btv", hidden, w,
+                        preferred_element_type=jnp.float32)
+    logits = shd.constrain(logits, mesh, cfg.sharding,
+                           "batch", "seq", "vocab")
+    return L.cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(model, tc: TrainConfig, rng: jax.Array) -> Dict:
+    params = model.init(rng)
+    slots = opt.init_slots(jax.tree.leaves(params), tc)
+    return {"params": params, "opt": slots, "step": jnp.zeros((), jnp.int32)}
+
+
+def _leaf_specs(model) -> list:
+    """[(shape, logical)] per param leaf, leaf-aligned with tree.leaves."""
+    spec_leaves = jax.tree.leaves(model.specs, is_leaf=_is_spec)
+    return [(s.shape, s.logical) for s in spec_leaves]
+
+
+def abstract_train_state(model, tc: TrainConfig) -> Tuple[Dict, Dict]:
+    """(abstract state, logical-axes state) without allocating anything."""
+    ab_params = model.abstract_params()
+    lg_params = model.logical_axes()
+    ab_slots, lg_slots = opt.abstract_slots(_leaf_specs(model), tc)
+    ab = {"params": ab_params, "opt": ab_slots,
+          "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    lg = {"params": lg_params, "opt": lg_slots, "step": ()}
+    return ab, lg
+
+
+def state_pspecs(model, tc: TrainConfig, mesh, policy: str):
+    ab, lg = abstract_train_state(model, tc)
+    return ab, shd.tree_pspecs(ab, lg, mesh, policy)
+
+
+# ---------------------------------------------------------------------------
+# step factories
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model, tc: TrainConfig, mesh=None, jit: bool = True):
+    """When ``tc.grad_accum > 1`` every batch leaf must arrive pre-split as
+    (grad_accum, micro_batch, ...) — the loader adds the leading microbatch
+    dim on the host so the sharded batch axis is never reshaped inside the
+    step (reshaping a sharded axis would insert collectives)."""
+    sched = make_schedule(tc)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(functools.partial(loss_fn, model))(
+            params, batch, mesh=mesh)
+
+    def step(state, batch):
+        params = state["params"]
+        if tc.grad_accum > 1:
+            micro = batch  # leading dim == grad_accum (pre-split)
+            acc_dt = jnp.bfloat16 if tc.accum_dtype == "bfloat16" \
+                else jnp.float32
+
+            def acc(carry, mb):
+                tot_loss, tot_g = carry
+                l, g = grads_of(params, mb)
+                return (tot_loss + l,
+                        jax.tree.map(lambda a, b: a + b.astype(acc_dt),
+                                     tot_g, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zeros), micro)
+            loss = loss / tc.grad_accum
+            grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+        grads, gnorm = opt.clip_by_global_norm(grads, tc.grad_clip)
+        lr = sched(state["step"])
+        new_params, new_slots = opt.adamw_update(
+            params, grads, state["opt"], state["step"], lr, tc)
+        new_state = {"params": new_params, "opt": new_slots,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "lr": lr}
+        return new_state, metrics
+
+    return jax.jit(step, donate_argnums=0) if jit else step
+
+
+def make_sharded_train_step(model, tc: TrainConfig, mesh, policy: str,
+                            batch_pspecs: Dict):
+    """pjit train step with explicit in/out shardings (launcher + dry-run).
+
+    Returns (step_fn, abstract_state, state_shardings).
+    """
+    ab_state, pspecs = state_pspecs(model, tc, mesh, policy)
+    state_sh = shd.tree_named(mesh, pspecs)
+    batch_sh = {k: shd.named(mesh, v) for k, v in batch_pspecs.items()}
+    raw = make_train_step(model, tc, mesh=mesh, jit=False)
+    metrics_sh = shd.named(mesh, jax.sharding.PartitionSpec())
+    step = jax.jit(
+        raw,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, {"loss": metrics_sh, "grad_norm": metrics_sh,
+                                  "lr": metrics_sh}),
+        donate_argnums=0,
+    )
+    return step, ab_state, state_sh

@@ -1,0 +1,94 @@
+"""Trainer: the fault-tolerant composition of loader + sharded step +
+checkpoint + straggler monitor.
+
+Responsibilities:
+  * build the (optionally pjit-sharded) train step for the mesh;
+  * resume from the latest published checkpoint if one exists
+    (checkpoint/restart fault tolerance; re-mesh handled by restore());
+  * checkpoint every ``ckpt_every`` steps, atomically;
+  * time each step through the StragglerMonitor.
+
+The same class drives the reduced-config smoke train runs and the
+production launcher (launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.data.loader import ShardedLoader
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.straggler import StragglerMonitor
+from repro.training.train_loop import (init_train_state, make_sharded_train_step,
+                                       make_train_step)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = ""
+    ckpt_every: int = 100
+    log_every: int = 10
+    max_steps: int = 1000
+
+
+class Trainer:
+    def __init__(self, model, tc: TrainConfig, tcfg: TrainerConfig,
+                 mesh=None, policy: str = "fsdp_tp",
+                 batch_pspecs: Optional[Dict] = None, seed: int = 0,
+                 log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.tc = tc
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.log = log_fn
+        self.monitor = StragglerMonitor()
+        if mesh is not None and batch_pspecs is not None:
+            self.step_fn, _, self.state_sh = make_sharded_train_step(
+                model, tc, mesh, policy, batch_pspecs)
+        else:
+            self.step_fn, self.state_sh = make_train_step(model, tc), None
+        self.state = self._init_or_resume(seed)
+
+    def _init_or_resume(self, seed: int):
+        state = init_train_state(self.model, self.tc, jax.random.key(seed))
+        if self.tcfg.ckpt_dir:
+            last = ckpt.latest_step(self.tcfg.ckpt_dir)
+            if last is not None:
+                state, manifest = ckpt.restore(
+                    self.tcfg.ckpt_dir, last, state, shardings=self.state_sh)
+                self.log(f"[trainer] resumed from step {last}")
+        return state
+
+    @property
+    def step(self) -> int:
+        return int(jax.device_get(self.state["step"]))
+
+    def fit(self, batches: Iterable[Dict]) -> Dict[str, Any]:
+        last_metrics: Dict[str, Any] = {}
+        for batch in batches:
+            if self.step >= self.tcfg.max_steps:
+                break
+            self.monitor.start()
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            event = self.monitor.stop()
+            if event is not None:
+                self.log(f"[trainer] straggler at step {event.step}: "
+                         f"{event.duration * 1e3:.0f}ms vs median "
+                         f"{event.median * 1e3:.0f}ms")
+            s = self.step
+            if self.tcfg.log_every and s % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step {s} loss "
+                         f"{float(jax.device_get(metrics['loss'])):.4f}")
+            if self.tcfg.ckpt_dir and self.tcfg.ckpt_every and \
+                    s % self.tcfg.ckpt_every == 0:
+                ckpt.save(self.tcfg.ckpt_dir, s, self.state)
+            last_metrics = metrics
+        if self.tcfg.ckpt_dir:
+            ckpt.save(self.tcfg.ckpt_dir, self.step, self.state)
+        return {k: float(jax.device_get(v)) for k, v in last_metrics.items()}

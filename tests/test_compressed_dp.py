@@ -1,0 +1,67 @@
+"""Compressed-DP train step: learns, and tracks the uncompressed
+trajectory (error feedback keeps int8 gradient reduction unbiased).
+Cross-device behaviour checked on a real 4-device mesh in a subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke
+from repro.configs.base import TrainConfig
+from repro.models.registry import get_model
+from repro.training.compressed_dp import (init_ef_state,
+                                          make_compressed_dp_train_step)
+from repro.training.train_loop import init_train_state, make_train_step
+
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+cfg = get_smoke("qwen2-1.5b")
+model = get_model(cfg)
+tc = TrainConfig(learning_rate=1e-2, schedule="constant")
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                               jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                               jnp.int32)}
+
+# uncompressed reference (single device semantics, same global batch)
+ref_step = make_train_step(model, tc)
+ref_state = init_train_state(model, tc, jax.random.key(0))
+ref = []
+for _ in range(5):
+    ref_state, m = ref_step(ref_state, batch)
+    ref.append(float(m["loss"]))
+
+# compressed DP over 4 devices
+step = make_compressed_dp_train_step(model, tc, mesh, compress_axis="data")
+state = init_train_state(model, tc, jax.random.key(0))
+ef = init_ef_state(state["params"])
+comp = []
+carry = (state, ef)
+with mesh:
+    for _ in range(5):
+        carry, m = step(carry, batch)
+        comp.append(float(m["loss"]))
+print(json.dumps({"ref": ref, "comp": comp}))
+"""
+
+
+def test_compressed_dp_tracks_reference():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    ref, comp = out["ref"], out["comp"]
+    assert all(np.isfinite(ref)) and all(np.isfinite(comp))
+    assert comp[-1] < comp[0], out          # it learns
+    for a, b in zip(ref, comp):             # and tracks the exact reduction
+        assert abs(a - b) < 0.05 * abs(a) + 0.05, out

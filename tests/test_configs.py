@@ -1,0 +1,61 @@
+"""Guard the assigned architecture configs against drift: every published
+dimension from the assignment table is pinned here."""
+import pytest
+
+from repro.configs import ARCH_IDS, LONG_CONTEXT_OK, cells, get_config, get_smoke
+
+# (layers, d_model, heads, kv, d_ff, vocab) per the assignment
+PUBLISHED = {
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+    "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+    "mamba2-1.3b": (48, 2048, None, None, 0, 50280),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+}
+
+EXTRAS = {
+    "zamba2-2.7b": {"ssm_state": 64},
+    "mamba2-1.3b": {"ssm_state": 128},
+    "kimi-k2-1t-a32b": {"num_experts": 384, "experts_per_token": 8},
+    "dbrx-132b": {"num_experts": 16, "experts_per_token": 4},
+    "gemma3-4b": {"local_global_ratio": 5},
+    "qwen2-1.5b": {"qkv_bias": True},
+    "qwen1.5-4b": {"qkv_bias": True},
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_published_dimensions(arch):
+    cfg = get_config(arch)
+    nl, d, h, kv, ff, v = PUBLISHED[arch]
+    assert cfg.num_layers == nl
+    assert cfg.d_model == d
+    if h is not None:
+        assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    if ff:
+        assert cfg.d_ff == ff
+    # ragged vocabs are padded up (<= 256) for shardability — documented
+    # in the config files (whisper 51865->51872, internvl2 92553->92672)
+    assert v <= cfg.vocab_size < v + 256
+    for k, val in EXTRAS.get(arch, {}).items():
+        assert getattr(cfg, k) == val, (arch, k)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_is_same_family_but_small(arch):
+    full, smoke = get_config(arch), get_smoke(arch)
+    assert smoke.family == full.family
+    assert smoke.num_layers <= 6 and smoke.d_model <= 128
+    assert smoke.vocab_size <= 1024
+
+
+def test_long_context_cells():
+    """long_500k runs exactly for the sub-quadratic archs."""
+    assert LONG_CONTEXT_OK == {"zamba2-2.7b", "mamba2-1.3b", "gemma3-4b"}
+    total = sum(len(cells(a)) for a in ARCH_IDS)
+    assert total == 33  # 10 archs x 3 shapes + 3 long_500k

@@ -1,0 +1,56 @@
+"""Cost models (paper Eqn. 4) + ledger."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import (AMAZON, SATYAM, CostLedger, LabelingService,
+                             TrainCostModel, schedule_sizes)
+
+
+def test_eqn4_closed_form_matches_schedule_sum():
+    cm = TrainCostModel(c_u=0.004, exponent=1)
+    for B, delta in [(10000, 500), (16000, 1000), (7000, 700)]:
+        sizes = schedule_sizes(0, B, delta)
+        assert cm.cost_from_scratch(B, delta) == pytest.approx(
+            0.004 * float(np.sum(sizes)), rel=1e-9)
+        # paper formula: 1/2 c_u B (B/delta + 1)
+        assert cm.cost_from_scratch(B, delta) == pytest.approx(
+            0.5 * 0.004 * B * (B / delta + 1), rel=1e-9)
+
+
+def test_cubic_variant():
+    cm = TrainCostModel(c_u=1e-7, exponent=2)
+    sizes = schedule_sizes(0, 4000, 1000)
+    assert cm.cost_from_scratch(4000, 1000) == pytest.approx(
+        1e-7 * float(np.sum(sizes.astype(float) ** 2)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(start=st.integers(0, 5000), gap=st.integers(1, 20000),
+       delta=st.integers(100, 5000))
+def test_property_grow_cost_consistency(start, gap, delta):
+    """cost_to_grow == sum of per-iteration costs of the actual schedule."""
+    cm = TrainCostModel(c_u=0.01, exponent=1)
+    end = start + gap
+    m = int(np.ceil(gap / delta))
+    sizes = np.minimum(start + delta * np.arange(1, m + 1), end)
+    assert cm.cost_to_grow(start, end, delta) == pytest.approx(
+        0.01 * float(np.sum(sizes)), rel=1e-9)
+
+
+def test_fit_recovers_cu():
+    cm = TrainCostModel(exponent=1)
+    sizes = [1000, 2000, 4000]
+    costs = [4.0, 8.0, 16.0]
+    cm.fit(sizes, costs)
+    assert cm.c_u == pytest.approx(0.004)
+
+
+def test_ledger():
+    led = CostLedger()
+    led.pay_human(100, AMAZON)
+    led.pay_human(100, SATYAM)
+    led.pay_training(1.5)
+    assert led.human == pytest.approx(100 * 0.04 + 100 * 0.003)
+    assert led.total == pytest.approx(led.human + 1.5)
+    assert led.human_labels == 200

@@ -1,0 +1,60 @@
+"""Emulator invariants: the measured error curves must follow the
+generating truncated power-law family (MCAL's measurement machinery is
+only as meaningful as this holds)."""
+import numpy as np
+import pytest
+
+from repro.core.emulator import EmulatedTask, make_emulated_task
+from repro.core.powerlaw import PowerLaw
+from repro.core.selection import machine_label_error_curve
+
+
+def _measured_curve(task, B, thetas, seed=0):
+    rng = np.random.default_rng(seed)
+    T_idx = rng.choice(task.pool_size, 4000, replace=False)
+    train = rng.choice(np.setdiff1d(np.arange(task.pool_size), T_idx), B,
+                       replace=False)
+    task.train(train, task.human_label(train))
+    stats, _ = task.score(T_idx)
+    correct = task.eval_correct(T_idx, task.human_label(T_idx))
+    return machine_label_error_curve(stats, correct, thetas)
+
+
+def test_full_pool_error_follows_law():
+    task = make_emulated_task("cifar10", "resnet18", seed=0)
+    law = task.law
+    for B in (2000, 8000, 20000):
+        curve = _measured_curve(task, B, [1.0])
+        want = float(law.predict(B))
+        assert curve[0] == pytest.approx(want, rel=0.15), (B, curve[0], want)
+
+
+def test_theta_concentration_exponent():
+    """eps_theta ~ eps_full * theta^q by construction."""
+    task = make_emulated_task("cifar10", "resnet18", seed=1)
+    thetas = [0.25, 0.5, 1.0]
+    curve = _measured_curve(task, 8000, thetas, seed=1)
+    q = task.q
+    for th, e in zip(thetas, curve):
+        want = float(task.law.predict(8000)) * th ** q
+        assert e == pytest.approx(want, rel=0.3, abs=5e-3), (th, e, want)
+
+
+def test_deterministic_per_B():
+    """Scoring/prediction draws are stable for a fixed trained size."""
+    t1 = make_emulated_task("fashion", "resnet18", seed=3)
+    t2 = make_emulated_task("fashion", "resnet18", seed=3)
+    idx = np.arange(500)
+    for t in (t1, t2):
+        t.train(np.arange(1000, 3000), t.human_label(np.arange(1000, 3000)))
+    np.testing.assert_array_equal(t1.predict(idx), t2.predict(idx))
+    s1, _ = t1.score(idx)
+    s2, _ = t2.score(idx)
+    np.testing.assert_allclose(np.asarray(s1.margin), np.asarray(s2.margin))
+
+
+def test_training_cost_is_linear_in_B():
+    task = make_emulated_task("cifar100", "resnet50", seed=0)
+    c1 = task.train(np.arange(1000), task.labels_gt[:1000])
+    c2 = task.train(np.arange(2000), task.labels_gt[:2000])
+    assert c2 == pytest.approx(2 * c1)

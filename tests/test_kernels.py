@@ -1,0 +1,91 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.margin_head import margin_head
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels import ref
+from repro.models.layers import score_stats_from_logits
+from repro.models.mamba2 import ssd_chunked
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("T,D,V,bt,bv", [
+    (128, 64, 512, 64, 256),
+    (200, 48, 1000, 64, 128),    # ragged T and V
+    (65, 32, 257, 32, 128),      # tiny + prime-ish V
+    (256, 128, 4096, 128, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_margin_head_sweep(T, D, V, bt, bv, dtype):
+    h = jnp.asarray(RNG.normal(size=(T, D)), dtype)
+    w = jnp.asarray(RNG.normal(size=(D, V)) * 0.1, dtype)
+    m, e, mlp, t1 = margin_head(h, w, bt=bt, bv=bv, interpret=True)
+    rm, re, rmlp, rt1 = ref.margin_head_ref(h, w)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(m), np.asarray(rm), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(re), atol=tol * 10,
+                               rtol=tol * 10)
+    np.testing.assert_allclose(np.asarray(mlp), np.asarray(rmlp), atol=tol,
+                               rtol=tol)
+    if dtype == jnp.float32:
+        assert (np.asarray(t1) == np.asarray(rt1)).all()
+
+
+@pytest.mark.parametrize("B,H,Hk,Tq,Tk,hd,causal,window", [
+    (2, 4, 2, 128, 128, 32, True, 0),
+    (1, 4, 4, 96, 96, 16, True, 0),
+    (2, 8, 2, 64, 64, 32, True, 24),     # sliding window
+    (1, 2, 1, 50, 130, 16, False, 0),    # cross-attention shape
+    (1, 6, 3, 33, 77, 8, True, 0),       # ragged
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, Hk, Tq, Tk, hd, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, H, Tq, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hk, Tk, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hk, Tk, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=32,
+                          bk=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 5e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,T,H,hd,N,C", [
+    (2, 128, 4, 16, 32, 64),
+    (1, 96, 2, 8, 16, 32),      # ragged T vs chunk
+    (2, 64, 8, 32, 64, 64),
+    (1, 256, 4, 64, 128, 128),
+])
+def test_ssd_scan_sweep(B, T, H, hd, N, C):
+    xh = jnp.asarray(RNG.normal(size=(B, T, H, hd)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, T, H))) * 0.5 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(np.abs(RNG.normal(size=(H,))) * 0.5 + 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    y, h = ssd_scan(xh, dt, A, Bm, Cm, chunk=C, interpret=True)
+    yr, hr = ssd_chunked(xh, dt, A, Bm, Cm, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_ops_dispatch():
+    """ops.score_head must agree between forced kernel and forced ref."""
+    from repro.kernels import ops
+    h = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(32, 300)) * 0.1, jnp.float32)
+    a = ops.score_head(h, w, force_pallas=True)
+    b = ops.score_head(h, w, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(a.margin), np.asarray(b.margin),
+                               atol=1e-4)
+    assert (np.asarray(a.top1) == np.asarray(b.top1)).all()

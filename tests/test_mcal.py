@@ -1,0 +1,101 @@
+"""MCAL driver: emulated end-to-end campaigns, invariants, variants."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (AMAZON, SATYAM, MCALCampaign, MCALConfig,
+                        make_emulated_task, run_mcal, select_architecture)
+from repro.core.baselines import run_naive_al
+from repro.core.emulator import DATASETS
+
+
+@pytest.mark.parametrize("ds", ["fashion", "cifar10", "cifar100"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_campaign_meets_error_and_beats_human(ds, seed):
+    task = make_emulated_task(ds, "resnet18", seed=seed)
+    res = run_mcal(task, AMAZON, MCALConfig(seed=seed))
+    assert res.measured_error <= 0.05 + 0.005, res.measured_error
+    assert res.total_cost < task.pool_size * 0.04
+    # every sample got a label
+    assert (res.labels >= 0).all()
+
+
+def test_campaign_beats_naive_al():
+    """The paper's headline: cheaper than AL at ANY tested delta."""
+    mcal = run_mcal(make_emulated_task("cifar10", "resnet18", seed=0),
+                    AMAZON, MCALConfig(seed=0))
+    for d in (0.033, 0.067, 0.10):
+        al = run_naive_al(make_emulated_task("cifar10", "resnet18", seed=0),
+                          AMAZON, d)
+        assert mcal.total_cost <= al.cost * 1.001, (d, al.cost)
+
+
+def test_imagenet_bails_out_with_bounded_tax():
+    task = make_emulated_task("imagenet", "efficientnet-b0", seed=0)
+    res = run_mcal(task, AMAZON, MCALConfig(seed=0))
+    human_all = task.pool_size * 0.04
+    assert res.decision == "human_all"
+    assert res.ledger["training"] <= 0.15 * human_all
+    assert res.measured_error == 0.0  # everything human-labeled
+
+
+def test_budget_variant_spends_within_budget_and_error_decreases():
+    errs = []
+    for budget in (600.0, 1200.0):
+        task = make_emulated_task("cifar10", "resnet18", seed=0)
+        res = run_mcal(task, AMAZON, MCALConfig(seed=0, budget=budget))
+        assert res.total_cost <= budget * 1.001
+        errs.append(res.measured_error)
+    assert errs[1] <= errs[0]
+
+
+def test_arch_selection_picks_res18():
+    tasks = {a: make_emulated_task("cifar10", a, seed=0)
+             for a in ("cnn18", "resnet18", "resnet50")}
+    winner, res, hist = select_architecture(tasks, AMAZON, MCALConfig(seed=0))
+    assert winner == "resnet18"
+    assert res.measured_error <= 0.055
+    assert set(hist) == set(tasks)
+
+
+def test_satyam_cheaper_labels_still_meet_constraint():
+    task = make_emulated_task("cifar10", "resnet18", seed=3)
+    res = run_mcal(task, SATYAM, MCALConfig(seed=3))
+    assert res.measured_error <= 0.055
+    assert res.total_cost < task.pool_size * 0.003
+
+
+def test_campaign_checkpoint_resume_mid_loop():
+    """Preempt after a few iterations; the resumed campaign must finish
+    with identical economics (deterministic emulator)."""
+    cfg = MCALConfig(seed=0)
+
+    def fresh():
+        return MCALCampaign(make_emulated_task("cifar10", "resnet18", seed=0),
+                            AMAZON, cfg)
+
+    ref = fresh()
+    ref.bootstrap()
+    for _ in range(3):
+        ref.iteration()
+    blob = json.dumps(ref.state_dict())  # must be JSON-serializable
+
+    resumed = fresh()
+    resumed.load_state_dict(json.loads(blob))
+    while not ref.done:
+        ref.iteration()
+    while not resumed.done:
+        resumed.iteration()
+    a, b = ref.commit(), resumed.commit()
+    assert a.total_cost == pytest.approx(b.total_cost, rel=1e-9)
+    assert a.S_size == b.S_size and a.B_size == b.B_size
+
+
+def test_relaxed_eps_saves_more():
+    t5 = run_mcal(make_emulated_task("cifar10", "resnet18", seed=0), AMAZON,
+                  MCALConfig(seed=0, eps_target=0.05))
+    t10 = run_mcal(make_emulated_task("cifar10", "resnet18", seed=0), AMAZON,
+                   MCALConfig(seed=0, eps_target=0.10))
+    assert t10.total_cost <= t5.total_cost * 1.02
+    assert t10.measured_error <= 0.10 + 0.005

@@ -1,0 +1,61 @@
+"""Token-routing EP (a2a) MoE == replicate+psum MoE, on a real (2,2) mesh.
+
+Capacity factor is set high so no copies are dropped — then the two routes
+must agree numerically (same experts, same weights, different wire)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ModelConfig
+from repro.models.transformer import moe_block, moe_specs
+from repro.models.param import init_params
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+base = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
+                   num_heads=4, num_kv_heads=2, d_ff=16, vocab_size=64,
+                   num_experts=4, experts_per_token=2,
+                   moe_capacity_factor=8.0, dtype="float32")
+specs = moe_specs(base, 1)
+params = init_params(specs, jax.random.key(0))
+params = jax.tree.map(lambda a: a[0], params)  # unstack the layer dim
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(2, 8, 32)) * 0.5, jnp.float32)
+
+results = {}
+with mesh:
+    ref = moe_block(base.replace(moe_route="replicate_psum"), params, x,
+                    mesh=mesh)
+    # the a2a route with F-gathered experts must be exact ("psum" FFN is
+    # invalid with data-sharded tokens by construction — see _expert_ffn)
+    for gd in ("bf16", "int8"):
+        out = moe_block(base.replace(moe_route="a2a", moe_ffn_mode="gather",
+                                     moe_gather_dtype=gd),
+                        params, x, mesh=mesh)
+        key = f"a2a_{gd}"
+        tol_scale = 1.0 if gd == "bf16" else 50.0  # int8 weights are lossy
+        results[key] = float(jnp.max(jnp.abs(out - ref))) / tol_scale
+    solo = moe_block(base, params, x, mesh=None)
+    results["ref_vs_solo"] = float(jnp.max(jnp.abs(ref - solo)))
+print(json.dumps(results))
+"""
+
+
+def test_a2a_matches_replicate_psum():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    for key, err in out.items():
+        assert err < 1e-4, (key, err, out)

@@ -1,0 +1,99 @@
+"""AdamW vs reference math + memory-lever variants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.training import optimizer as opt
+
+
+def _np_adamw(p, g, m, v, t, lr, tc):
+    m = tc.beta1 * m + (1 - tc.beta1) * g
+    v = tc.beta2 * v + (1 - tc.beta2) * g * g
+    mh = m / (1 - tc.beta1 ** t)
+    vh = v / (1 - tc.beta2 ** t)
+    upd = mh / (np.sqrt(vh) + tc.eps)
+    if p.ndim >= 2:
+        upd = upd + tc.weight_decay * p
+    return p - lr * upd, m, v
+
+
+def test_adamw_matches_reference_math():
+    tc = TrainConfig(weight_decay=0.01)
+    rng = np.random.default_rng(0)
+    p0 = rng.normal(size=(8, 16)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    slots = opt.init_slots([params["w"]], tc)
+    m = np.zeros_like(p0)
+    v = np.zeros_like(p0)
+    p_ref = p0.copy()
+    for t in range(1, 4):
+        g = rng.normal(size=p0.shape).astype(np.float32)
+        params, slots = opt.adamw_update(
+            params, {"w": jnp.asarray(g)}, slots, jnp.int32(t - 1),
+            jnp.float32(1e-2), tc)
+        p_ref, m, v = _np_adamw(p_ref, g, m, v, t, 1e-2, tc)
+    np.testing.assert_allclose(np.asarray(params["w"]), p_ref, rtol=2e-5,
+                               atol=2e-6)
+
+
+def test_factored_second_moment_close_to_full():
+    """Adafactor-style v must track full v within a modest factor."""
+    tc_full = TrainConfig()
+    tc_fac = TrainConfig(factored_second_moment=True)
+    rng = np.random.default_rng(1)
+    p = {"w": jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)}
+    sf = opt.init_slots([p["w"]], tc_full)
+    sa = opt.init_slots([p["w"]], tc_fac)
+    pf, pa = p, p
+    for t in range(5):
+        g = {"w": jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)}
+        pf, sf = opt.adamw_update(pf, g, sf, jnp.int32(t), jnp.float32(1e-2),
+                                  tc_full)
+        pa, sa = opt.adamw_update(pa, g, sa, jnp.int32(t), jnp.float32(1e-2),
+                                  tc_fac)
+    # same direction, bounded deviation
+    d_full = np.asarray(pf["w"]) - np.asarray(p["w"])
+    d_fac = np.asarray(pa["w"]) - np.asarray(p["w"])
+    cos = np.sum(d_full * d_fac) / (
+        np.linalg.norm(d_full) * np.linalg.norm(d_fac))
+    assert cos > 0.9
+    assert "vr" in sa[0] and "vc" in sa[0] and "v" not in sa[0]
+
+
+def test_int8_moment_roundtrip():
+    tc = TrainConfig(moment_dtype="int8")
+    rng = np.random.default_rng(2)
+    p = {"w": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+    slots = opt.init_slots([p["w"]], tc)
+    assert slots[0]["m_q"].dtype == jnp.int8
+    g = {"w": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+    p2, slots = opt.adamw_update(p, g, slots, jnp.int32(0), jnp.float32(1e-2),
+                                 tc)
+    m_true = 0.1 * np.asarray(g["w"])
+    m_q = np.asarray(opt.dequantize_int8(
+        {"q": slots[0]["m_q"], "scale": slots[0]["m_scale"]}))
+    np.testing.assert_allclose(m_q, m_true, atol=float(np.max(np.abs(m_true)))
+                               / 100)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((3,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    total = np.sqrt(sum(np.sum(np.asarray(l) ** 2)
+                        for l in jax.tree.leaves(clipped)))
+    assert norm == pytest.approx(np.sqrt(9 * 3 + 16 * 4))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_slot_spec_shapes_match_init():
+    tc = TrainConfig(moment_dtype="int8", factored_second_moment=True)
+    shape = (12, 24, 48)
+    spec = opt.slot_spec(shape, (None, None, None), tc)
+    assert spec["vr"][0] == (12, 24) and spec["vc"][0] == (12, 48)
+    slots = opt.init_slots([jnp.zeros(shape)], tc)
+    for k, (sh, dt, _) in spec.items():
+        assert slots[0][k].shape == sh and slots[0][k].dtype == dt

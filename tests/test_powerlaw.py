@@ -1,0 +1,92 @@
+"""Truncated power-law model (paper Eqn. 3): fit recovery + properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.powerlaw import EPS_FLOOR, PowerLaw, fit_power_law, required_size
+
+SIZES = np.asarray([200, 500, 1000, 2000, 4000, 8000, 16000, 32000], float)
+
+
+def test_exact_recovery_noiseless():
+    true = PowerLaw(alpha=4.0, gamma=0.45, k=2e4)
+    fit = fit_power_law(SIZES, true.predict(SIZES))
+    np.testing.assert_allclose(fit.alpha, true.alpha, rtol=1e-6)
+    np.testing.assert_allclose(fit.gamma, true.gamma, rtol=1e-6)
+    np.testing.assert_allclose(fit.k, true.k, rtol=1e-5)
+
+
+def test_plain_power_law_recovery():
+    true = PowerLaw(alpha=2.0, gamma=0.3)
+    fit = fit_power_law(SIZES, true.predict(SIZES), truncated=False)
+    np.testing.assert_allclose(fit.alpha, 2.0, rtol=1e-6)
+    np.testing.assert_allclose(fit.gamma, 0.3, rtol=1e-6)
+    assert np.isinf(fit.k)
+
+
+def test_noisy_recovery_within_tolerance():
+    rng = np.random.default_rng(0)
+    true = PowerLaw(alpha=9.0, gamma=0.5, k=2e5)
+    errs = true.predict(SIZES) * np.exp(rng.normal(0, 0.05, len(SIZES)))
+    fit = fit_power_law(SIZES, errs)
+    pred = fit.predict(50_000)
+    assert abs(pred - true.predict(50_000)) / true.predict(50_000) < 0.4
+
+
+def test_truncated_beats_plain_at_extrapolation():
+    rng = np.random.default_rng(1)
+    true = PowerLaw(alpha=4.0, gamma=0.4, k=3e4)  # strong falloff
+    rel_t, rel_p = [], []
+    for s in range(10):
+        rng = np.random.default_rng(s)
+        errs = true.predict(SIZES) * np.exp(rng.normal(0, 0.03, len(SIZES)))
+        t = fit_power_law(SIZES, errs, truncated=True).predict(60_000)
+        p = fit_power_law(SIZES, errs, truncated=False).predict(60_000)
+        tgt = true.predict(60_000)
+        rel_t.append(abs(t - tgt) / tgt)
+        rel_p.append(abs(p - tgt) / tgt)
+    assert np.mean(rel_t) < np.mean(rel_p)
+
+
+def test_degenerate_few_points():
+    one = fit_power_law([1000], [0.2])
+    assert one.predict(5000) == pytest.approx(0.2)
+    two = fit_power_law([1000, 4000], [0.2, 0.1])
+    assert two.gamma >= 0
+    assert two.predict(8000) <= 0.11
+
+
+def test_eps_floor():
+    fit = fit_power_law(SIZES, np.zeros_like(SIZES))
+    assert np.all(fit.predict(SIZES) >= EPS_FLOOR / 10)
+
+
+@settings(max_examples=60, deadline=None)
+@given(alpha=st.floats(0.1, 50), gamma=st.floats(0.0, 1.0),
+       logk=st.floats(3.5, 7.0))
+def test_property_fit_recovers_family(alpha, gamma, logk):
+    """Noiseless members of the family are fixed points of the fit."""
+    true = PowerLaw(alpha=alpha, gamma=gamma, k=10.0 ** logk)
+    y = true.predict(SIZES)
+    if np.any(y < EPS_FLOOR * 10):  # floor clips the signal; skip
+        return
+    fit = fit_power_law(SIZES, y)
+    np.testing.assert_allclose(fit.predict(SIZES), y, rtol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.01, 0.9), min_size=4, max_size=8))
+def test_property_prediction_monotone_nonincreasing(errs):
+    """Fitted family is always monotone non-increasing in n."""
+    sizes = SIZES[: len(errs)]
+    fit = fit_power_law(sizes, errs)
+    grid = np.linspace(sizes[0], sizes[-1] * 4, 64)
+    pred = fit.predict(grid)
+    assert np.all(np.diff(pred) <= 1e-12)
+
+
+def test_required_size_bisection():
+    law = PowerLaw(alpha=4.0, gamma=0.5, k=1e6)
+    n = required_size(law, 0.05)
+    assert law.predict(n) <= 0.05 <= law.predict(n * 0.9)
+    assert required_size(law, 1e-12, n_max=1e6) == np.inf

@@ -1,0 +1,83 @@
+"""Joint (|B|, theta) search + delta adaptation vs brute force."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import AMAZON, LabelingService, TrainCostModel
+from repro.core.powerlaw import PowerLaw
+from repro.core.search import adapt_delta, budget_search, joint_search
+
+THETAS = tuple(round(0.1 * i, 1) for i in range(1, 11))
+
+
+def _laws(alpha, gamma, k, q):
+    return {t: PowerLaw(alpha=alpha * t ** q, gamma=gamma, k=k)
+            for t in THETAS}
+
+
+def _brute_force(pool, test, cur, spent, laws, cm, delta, svc, eps):
+    best = (pool * svc.price_per_label + spent, cur, 0.0)
+    for B in range(cur, pool - test + 1, delta):
+        grow = cm.cost_to_grow(cur, B, delta)
+        for t, law in laws.items():
+            S = t * (pool - test - B)
+            if S / pool * law.predict(B) > eps:
+                continue
+            c = (pool - S) * svc.price_per_label + spent + grow
+            if c < best[0]:
+                best = (c, B, t)
+    return best
+
+
+@settings(max_examples=25, deadline=None)
+@given(alpha=st.floats(1.0, 30.0), gamma=st.floats(0.2, 0.7),
+       q=st.floats(0.5, 4.0), cu=st.floats(1e-4, 1e-2),
+       cur_frac=st.floats(0.01, 0.3))
+def test_property_joint_search_matches_brute_force(alpha, gamma, q, cu,
+                                                   cur_frac):
+    pool, test = 20_000, 1_000
+    cur = int(cur_frac * pool)
+    delta = 500
+    cur = (cur // delta) * delta or delta
+    laws = _laws(alpha, gamma, 2e5, q)
+    cm = TrainCostModel(c_u=cu, exponent=1)
+    spent = cm.cost_from_scratch(cur, delta)
+    res = joint_search(pool_size=pool, test_size=test, current_B=cur,
+                       spent=spent, laws=laws, cost_model=cm, delta=delta,
+                       service=AMAZON, eps_target=0.05)
+    bf_cost, bf_B, bf_t = _brute_force(pool, test, cur, spent, laws, cm,
+                                       delta, AMAZON, 0.05)
+    assert res.cost == pytest.approx(bf_cost, rel=1e-6)
+    if res.theta_opt > 0:
+        assert res.B_opt == bf_B and res.theta_opt == pytest.approx(bf_t)
+
+
+def test_search_falls_back_to_human_all():
+    laws = {t: PowerLaw(alpha=50.0, gamma=0.01) for t in THETAS}  # hopeless
+    cm = TrainCostModel(c_u=0.05, exponent=1)
+    res = joint_search(pool_size=10_000, test_size=500, current_B=500,
+                       spent=25.0, laws=laws, cost_model=cm, delta=500,
+                       service=AMAZON, eps_target=0.05)
+    assert res.theta_opt == 0.0
+    assert res.cost == pytest.approx(10_000 * 0.04 + 25.0)
+
+
+def test_budget_search_respects_budget():
+    laws = _laws(10.0, 0.5, 2e5, 1.5)
+    cm = TrainCostModel(c_u=0.004, exponent=1)
+    res = budget_search(pool_size=20_000, test_size=1_000, current_B=1_000,
+                        spent=10.0, laws=laws, cost_model=cm, delta=500,
+                        service=AMAZON, budget=500.0)
+    assert res.cost <= 500.0 + 1e-6 or not res.feasible
+
+
+def test_adapt_delta_prefers_fewest_retrains_within_slack():
+    cm = TrainCostModel(c_u=0.004, exponent=1)
+    d = adapt_delta(current_B=3_500, B_opt=6_000, cstar=994.0, spent=56.0,
+                    pool_size=50_000, test_size=2_500,
+                    machine_labeled=29_050, cost_model=cm, service=AMAZON,
+                    beta=0.05)
+    assert d == 2_500  # N = 1 jump fits inside (1 + beta) * C*
+    assert adapt_delta(current_B=6_000, B_opt=6_000, cstar=1.0, spent=0.0,
+                       pool_size=50_000, test_size=2_500, machine_labeled=0,
+                       cost_model=cm, service=AMAZON) == 0

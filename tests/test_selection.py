@@ -1,0 +1,80 @@
+"""Selection metrics M(.) / L(.) (paper §3.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel
+from repro.models.layers import ScoreStats
+
+
+def _stats(margin, entropy=None, maxlp=None):
+    n = len(margin)
+    return ScoreStats(
+        margin=np.asarray(margin, float),
+        entropy=np.asarray(entropy if entropy is not None else np.zeros(n)),
+        max_logprob=np.asarray(maxlp if maxlp is not None else -np.ones(n)),
+        top1=np.zeros(n, np.int64))
+
+
+def test_margin_selects_most_uncertain():
+    stats = _stats(margin=[5.0, 0.1, 3.0, 0.2])
+    cand = np.asarray([10, 11, 12, 13])
+    pick = sel.select_for_training("margin", 2, stats=stats, candidates=cand)
+    assert set(pick) == {11, 13}
+
+
+def test_l_ranking_most_confident_first():
+    stats = _stats(margin=[0.5, 4.0, 2.0])
+    order = sel.rank_for_machine_labeling(stats)
+    assert list(order) == [1, 2, 0]
+
+
+def test_entropy_and_least_confidence():
+    stats = _stats(margin=[1, 1, 1], entropy=[0.1, 2.0, 1.0],
+                   maxlp=[-0.01, -3.0, -1.0])
+    cand = np.arange(3)
+    assert sel.select_for_training("entropy", 1, stats=stats,
+                                   candidates=cand)[0] == 1
+    assert sel.select_for_training("least_confidence", 1, stats=stats,
+                                   candidates=cand)[0] == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.0, 10.0), min_size=5, max_size=40, unique=True),
+       st.integers(1, 5))
+def test_property_selection_permutation_invariant(margins, k):
+    """The selected SET is invariant to candidate permutation."""
+    k = min(k, len(margins))
+    stats = _stats(margins)
+    cand = np.arange(len(margins))
+    a = set(sel.select_for_training("margin", k, stats=stats, candidates=cand))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(margins))
+    stats_p = _stats(np.asarray(margins)[perm])
+    b = set(sel.select_for_training("margin", k, stats=stats_p,
+                                    candidates=cand[perm]))
+    assert a == b
+
+
+def test_kcenter_spreads():
+    """k-center must cover both clusters; uncertainty would not see them."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 0.1, size=(50, 2))
+    b = rng.normal(5, 0.1, size=(50, 2)) + 5
+    feats = np.concatenate([a, b])
+    rows = sel.k_center_greedy(feats, 2)
+    assert (rows[0] < 50) != (rows[1] < 50)
+
+
+def test_error_curve_monotone_under_perfect_ranking():
+    """With margin perfectly anti-correlated with error, the top-theta
+    error curve is non-decreasing in theta."""
+    n = 400
+    margin = np.linspace(2, 0, n)
+    correct = np.ones(n, bool)
+    correct[-n // 4:] = False  # errors concentrated at low margin
+    stats = _stats(margin)
+    curve = sel.machine_label_error_curve(stats, correct,
+                                          [0.25, 0.5, 0.75, 1.0])
+    assert np.all(np.diff(curve) >= -1e-12)
+    assert curve[0] == 0.0 and curve[-1] == pytest.approx(0.25)
