@@ -16,5 +16,7 @@ from repro.core.mcal import (MCALCampaign, MCALConfig, MCALResult,
 from repro.core.powerlaw import PowerLaw, fit_power_law, required_size
 from repro.core.search import (SearchResult, adapt_delta, budget_search,
                                joint_search)
+from repro.core.scoring import (PoolScoringEngine, ScoringConfig,
+                                score_pool_reference)
 from repro.core.task import LiveTask
 from repro.core import selection  # noqa: F401

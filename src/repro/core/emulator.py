@@ -31,6 +31,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.powerlaw import PowerLaw
+from repro.core.scoring import stats_from_confidence
 from repro.models.layers import ScoreStats
 
 
@@ -82,12 +83,8 @@ class EmulatedTask:
             np.random.Philox(key=self.seed + 104729 + 7919 * self._B))
         noise = rng.normal(0.0, self.rank_noise, self.pool_size)[idx]
         conf = 1.0 - self.u[idx] + noise
-        margin = conf
-        max_logprob = np.minimum(conf - 1.0, -1e-9)  # log p in (-inf, 0)
-        entropy = np.maximum(1.0 - conf, 0.0) * np.log(self.num_classes)
-        stats = ScoreStats(margin=margin, entropy=entropy,
-                           max_logprob=max_logprob,
-                           top1=self.predict(idx))
+        stats = stats_from_confidence(conf, self.num_classes,
+                                      self.predict(idx))
         feats = np.stack([conf, self.u[idx]], axis=1)
         return stats, feats
 

@@ -297,34 +297,53 @@ class MCALCampaign:
             take = min(self.delta, len(cand))
             if self.stable and self.B_opt > len(p.B_idx):
                 take = min(take, self.B_opt - len(p.B_idx))
-            stats = feats = None
-            if self.cfg.metric in sel.UNCERTAINTY_METRICS or \
-                    self.cfg.metric == "kcenter":
-                stats, feats = self.task.score(cand)
-            pick = sel.select_for_training(
-                self.cfg.metric, take, stats=stats, features=feats,
-                candidates=cand, anchors=self._anchor_feats, rng=self.rng)
-            if self.cfg.metric == "kcenter" and feats is not None:
-                chosen_rows = {c: i for i, c in enumerate(cand)}
-                rows = [chosen_rows[c] for c in pick]
-                new_anchors = feats[rows]
-                self._anchor_feats = (
-                    new_anchors if self._anchor_feats is None
-                    else np.concatenate([self._anchor_feats, new_anchors]))
+            pick = self._rank_candidates(take, cand)
         p.buy_labels(self.task, pick, self.service)
         p.in_B[pick] = True
         p.B_idx = np.concatenate([p.B_idx, pick])
         self._train_and_measure()
 
-    def propose_acquisition(self, k: int) -> np.ndarray:
-        """Rank candidates by this campaign's M(.) without committing."""
-        p = self.pool
-        cand = p.unlabeled_candidates()
-        k = min(k, len(cand))
-        stats, feats = self.task.score(cand)
-        return sel.select_for_training(
+    def _rank_candidates(self, k: int, cand: np.ndarray, *,
+                         commit_anchors: bool = True) -> np.ndarray:
+        """M(.): pick ``k`` of ``cand``.  Uncertainty metrics take the
+        device fast path when the task is engine-backed (top-k computed on
+        device, no pool-wide stats transfer); k-center and random fall back
+        to the host reference path.  ``commit_anchors=False`` leaves the
+        k-center anchor state untouched (proposal-only ranking)."""
+        if self.cfg.metric in sel.UNCERTAINTY_METRICS and \
+                hasattr(self.task, "topk_candidates"):
+            return self.task.topk_candidates(self.cfg.metric, k, cand)
+        stats = feats = None
+        if self.cfg.metric in sel.UNCERTAINTY_METRICS or \
+                self.cfg.metric == "kcenter":
+            stats, feats = self.task.score(cand)
+        pick = sel.select_for_training(
             self.cfg.metric, k, stats=stats, features=feats,
             candidates=cand, anchors=self._anchor_feats, rng=self.rng)
+        if self.cfg.metric == "kcenter" and feats is not None \
+                and commit_anchors:
+            chosen_rows = {c: i for i, c in enumerate(cand)}
+            rows = [chosen_rows[c] for c in pick]
+            new_anchors = feats[rows]
+            self._anchor_feats = (
+                new_anchors if self._anchor_feats is None
+                else np.concatenate([self._anchor_feats, new_anchors]))
+        return pick
+
+    def propose_acquisition(self, k: int) -> np.ndarray:
+        """Rank candidates by this campaign's M(.) without committing."""
+        cand = self.pool.unlabeled_candidates()
+        return self._rank_candidates(min(k, len(cand)), cand,
+                                     commit_anchors=False)
+
+    def _machine_label(self, idx: np.ndarray):
+        """L(.): one scoring sweep over ``idx`` -> (rows most-confident-
+        first, machine labels row-aligned with ``idx``).  The predicted
+        labels come from the same sweep's top1, so committing a campaign
+        costs a single pool pass."""
+        stats, _ = self.task.score(idx)
+        order = sel.rank_for_machine_labeling(stats, self.cfg.l_metric)
+        return order, np.asarray(stats.top1, np.int64)
 
     # -- commit ----------------------------------------------------------------
     def commit(self) -> MCALResult:
@@ -340,12 +359,11 @@ class MCALCampaign:
             n_human = min(int(afford / self.service.price_per_label),
                           len(remaining))
             m = len(remaining) - n_human
-            stats_R, _ = self.task.score(remaining)
-            order = sel.rank_for_machine_labeling(stats_R, self.cfg.l_metric)
+            order, pred = self._machine_label(remaining)
             S_idx = remaining[order[:m]]
             residual = remaining[order[m:]]
             if m:
-                p.labels[S_idx] = self.task.predict(S_idx)
+                p.labels[S_idx] = pred[order[:m]]
                 machine_mask[S_idx] = True
             p.buy_labels(self.task, residual, self.service)
             gt = self.task.human_label(np.arange(X))
@@ -378,11 +396,10 @@ class MCALCampaign:
                 self.decision = "human_all"
                 theta_final, S_size = 0.0, 0
             else:
-                stats_R, _ = self.task.score(remaining)
-                order = sel.rank_for_machine_labeling(stats_R, self.cfg.l_metric)
+                order, pred = self._machine_label(remaining)
                 S_idx = remaining[order[:m]]
                 residual = remaining[order[m:]]
-                p.labels[S_idx] = self.task.predict(S_idx)
+                p.labels[S_idx] = pred[order[:m]]
                 machine_mask[S_idx] = True
                 p.buy_labels(self.task, residual, self.service)
                 S_size = m

@@ -1,0 +1,278 @@
+"""Device-resident pool-scoring engine — MCAL's per-iteration hot path.
+
+Every MCAL iteration scores the entire unlabeled pool twice (Alg. 1):
+M(.) ranks candidates for the next delta human labels, L(.) ranks the
+remainder for the machine-label prefix.  The seed implementation ran this
+as a host-side python loop — chunked forward, transfer logits to host,
+numpy statistics per chunk — which serializes device work against host
+round-trips and re-materializes (chunk, V) logits in host memory.
+
+This engine runs the whole pool as ONE jit-compiled program:
+
+* the pool is padded into ``(n_microbatches, microbatch, ...)`` and swept
+  with ``lax.map`` — device-resident end to end, no host sync until the
+  packed statistics are fetched;
+* per microbatch: model forward + the vocab head fused into
+  :class:`ScoreStats` (margin / entropy / max-logprob / top1) via the
+  dense reference, the vocab-chunked online-softmax path, or the Pallas
+  ``margin_head`` kernel (``head_mode``), so (T, V) logits never hit HBM
+  for large vocabularies;
+* microbatch counts are bucketed to powers of two so a shrinking
+  candidate set re-uses O(log N) compiled programs instead of recompiling
+  every MCAL iteration;
+* the padded pool buffer is donated to the computation (where the backend
+  supports donation) and top-k candidate selection happens on device
+  (``lax.top_k`` over the packed scores, padding masked to -inf).
+
+The seed's host loop is preserved as :func:`score_pool_reference` — the
+oracle the engine is validated against (tests/test_scoring.py) and the
+baseline ``benchmarks/bench_selection.py`` measures speedup over.
+
+With a mesh, the microbatch dimension is sharded over the ``data`` axis
+(params replicated) and the same program scales across the pool's devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core.selection import UNCERTAINTY_METRICS  # noqa: F401 (re-export)
+from repro.models import layers as L
+from repro.models.layers import ScoreStats
+
+
+def resolve_head_weight(cfg, params) -> jax.Array:
+    """The (D, V) scoring-head matrix for any model family: the explicit
+    classifier head when present, otherwise the (possibly tied) LM head."""
+    if "cls_head" in params:
+        return params["cls_head"]
+    from repro.models.transformer import lm_head_weight
+    return lm_head_weight(cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# score packing (shared by the engine, the emulator, and serving)
+# ---------------------------------------------------------------------------
+
+
+def uncertainty_from_stats(stats: ScoreStats, metric: str) -> jax.Array:
+    """Higher = more uncertain, device-side (jnp twin of
+    ``selection.uncertainty_scores``)."""
+    if metric == "margin":
+        return -stats.margin
+    if metric == "entropy":
+        return stats.entropy
+    if metric == "least_confidence":
+        return 1.0 - jnp.exp(stats.max_logprob)
+    raise ValueError(f"unknown uncertainty metric {metric!r}")
+
+
+def stats_from_confidence(conf: np.ndarray, num_classes: int,
+                          top1: np.ndarray) -> ScoreStats:
+    """Pack a scalar confidence in [~0, 1] into a consistent ScoreStats
+    (the emulator's scoring path; margin == confidence by convention)."""
+    conf = np.asarray(conf, np.float64)
+    return ScoreStats(
+        margin=conf,
+        entropy=np.maximum(1.0 - conf, 0.0) * np.log(num_classes),
+        max_logprob=np.minimum(conf - 1.0, -1e-9),
+        top1=np.asarray(top1))
+
+
+def head_stats(hidden: jax.Array, w_head: jax.Array, *, mode: str = "auto",
+               vocab_chunk: int = 8192, pallas_interpret: bool = True,
+               pallas_bt: int = 128, pallas_bv: int = 512) -> ScoreStats:
+    """Fused vocab projection + ScoreStats for last-token hidden states.
+
+    ``hidden``: (T, D); ``w_head``: (D, V).  ``mode``:
+      dense    materialize (T, V) logits (exact reference; small V),
+      chunked  online top-2/logsumexp over vocab chunks (jnp),
+      pallas   the ``margin_head`` TPU kernel,
+      auto     dense when V fits comfortably, else chunked.
+    """
+    V = w_head.shape[-1]
+    if mode == "auto":
+        mode = "dense" if V <= 4096 else "chunked"
+    if mode == "dense":
+        logits = jnp.einsum("td,dv->tv", hidden, w_head,
+                            preferred_element_type=jnp.float32)
+        return L.score_stats_from_logits(logits)
+    if mode == "chunked":
+        return L.chunked_score_stats(hidden, w_head, chunk=vocab_chunk)
+    if mode == "pallas":
+        from repro.kernels.margin_head import margin_head
+        margin, entropy, max_logprob, top1 = margin_head(
+            hidden, w_head, bt=pallas_bt, bv=pallas_bv,
+            interpret=pallas_interpret)
+        return ScoreStats(margin=margin, entropy=entropy,
+                          max_logprob=max_logprob, top1=top1)
+    raise ValueError(f"unknown head mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoringConfig:
+    microbatch: int = 1024
+    head_mode: str = "auto"        # auto | dense | chunked | pallas
+    vocab_chunk: int = 8192
+    pallas_interpret: bool = True  # interpret kernels off-TPU
+    pallas_bt: int = 128
+    pallas_bv: int = 512
+    donate_pool: bool = True       # donate the padded pool buffer
+    with_features: bool = True     # also return last-hidden features
+
+
+class PoolScoringEngine:
+    """jit-compiled microbatched pool scorer for one model.
+
+    ``model`` is the registry facade; feature-classifier families consume
+    ``(N, input_dim)`` float pools, token families ``(N, T)`` int pools
+    (last-position statistics — the serving/labeling convention).
+    """
+
+    def __init__(self, model, cfg: ScoringConfig = ScoringConfig(),
+                 mesh=None):
+        self.model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        self._batch_key = ("features" if model.cfg.family == "mlp"
+                           else "tokens")
+        donate = cfg.donate_pool and jax.default_backend() != "cpu"
+        self._donate = donate
+        kwargs = {"donate_argnums": (1,) if donate else ()}
+        if mesh is not None:
+            xs_spec = NamedSharding(mesh, P(None, "data"))
+            p_spec = NamedSharding(mesh, P())
+            kwargs["in_shardings"] = (p_spec, xs_spec)
+        self._score_all = jax.jit(self._score_padded, **kwargs)
+
+    # -- model plumbing ----------------------------------------------------
+
+    def _microbatch_stats(self, params, x) -> Tuple[ScoreStats, jax.Array]:
+        hidden = self.model.forward(params, {self._batch_key: x})
+        h = hidden[:, -1, :].astype(jnp.float32)
+        c = self.cfg
+        w = resolve_head_weight(self.model.cfg, params)
+        stats = head_stats(h, w.astype(jnp.float32),
+                           mode=c.head_mode, vocab_chunk=c.vocab_chunk,
+                           pallas_interpret=c.pallas_interpret,
+                           pallas_bt=c.pallas_bt, pallas_bv=c.pallas_bv)
+        return stats, h
+
+    def _score_padded(self, params, xs):
+        """xs: (n_mb, mb, ...) -> packed ScoreStats (n_mb * mb,), features."""
+
+        def body(x):
+            stats, h = self._microbatch_stats(params, x)
+            if not self.cfg.with_features:
+                h = jnp.zeros((x.shape[0], 0), jnp.float32)
+            return stats, h
+
+        stats, feats = jax.lax.map(body, xs)
+        stats = compat.tree_map(lambda a: a.reshape(-1), stats)
+        return stats, feats.reshape(-1, feats.shape[-1])
+
+    # -- pool plumbing -----------------------------------------------------
+
+    def _pack(self, pool_x) -> Tuple[jax.Array, int]:
+        """Pad the pool to a power-of-two microbatch count and fold it into
+        (n_mb, mb, ...).  Bucketing (pow2 microbatch count, pow2 small-pool
+        width) bounds the number of compiled programs at O(log N) as MCAL's
+        candidate set shrinks across iterations."""
+        x = jnp.asarray(pool_x)
+        n = x.shape[0]
+
+        def next_pow2(c: int) -> int:
+            return 1 << max(c - 1, 0).bit_length()
+
+        if n >= self.cfg.microbatch:
+            mb = self.cfg.microbatch
+            n_mb = next_pow2(math.ceil(n / mb))
+        else:
+            mb = max(next_pow2(n), 8)
+            n_mb = 1
+        pad = n_mb * mb - n
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        elif self._donate and isinstance(pool_x, jax.Array):
+            # donation would otherwise invalidate the caller's own buffer
+            # (asarray/reshape alias device arrays when no padding copies)
+            x = jnp.copy(x)
+        return x.reshape((n_mb, mb) + x.shape[1:]), n
+
+    # -- public API --------------------------------------------------------
+
+    def score(self, params, pool_x) -> Tuple[ScoreStats, jax.Array]:
+        """Score the whole pool.  Returns device-resident ScoreStats and
+        (N, D) last-hidden features, trimmed to the true pool size."""
+        xs, n = self._pack(pool_x)
+        stats, feats = self._score_all(params, xs)
+        return (compat.tree_map(lambda a: a[:n], stats), feats[:n])
+
+    def score_host(self, params, pool_x) -> Tuple[ScoreStats, np.ndarray]:
+        """:meth:`score` fetched to host numpy (the task-facade boundary)."""
+        stats, feats = self.score(params, pool_x)
+        return (compat.tree_map(np.asarray, stats), np.asarray(feats))
+
+    def top_k(self, params, pool_x, k: int,
+              metric: str = "margin") -> np.ndarray:
+        """Indices (into ``pool_x`` rows) of the k most uncertain samples,
+        selected on device; sorted most-uncertain-first."""
+        xs, n = self._pack(pool_x)
+        k = min(k, n)
+        if k <= 0:
+            return np.zeros((0,), np.int64)
+        stats, _ = self._score_all(params, xs)
+        scores = uncertainty_from_stats(stats, metric)
+        valid = jnp.arange(scores.shape[0]) < n
+        _, idx = jax.lax.top_k(jnp.where(valid, scores, -jnp.inf), k)
+        return np.asarray(idx, np.int64)
+
+    def rank_confident(self, params, pool_x,
+                       metric: str = "margin") -> np.ndarray:
+        """Full pool ordering most-confident-first (L(.)); scores come from
+        the device sweep, the stable argsort stays on host."""
+        stats, _ = self.score(params, pool_x)
+        scores = np.asarray(uncertainty_from_stats(stats, metric))
+        return np.argsort(scores, kind="stable")
+
+
+# ---------------------------------------------------------------------------
+# the seed host path, kept as the reference oracle
+# ---------------------------------------------------------------------------
+
+
+def score_pool_reference(model, params, pool_x, chunk: int = 2048,
+                         batch_key: Optional[str] = None
+                         ) -> Tuple[ScoreStats, np.ndarray]:
+    """The seed implementation: chunked forward with a host round-trip per
+    chunk, numpy statistics at the end.  Exact; used to validate the engine
+    and as the benchmark baseline."""
+    batch_key = batch_key or ("features" if model.cfg.family == "mlp"
+                              else "tokens")
+    w = resolve_head_weight(model.cfg, params)
+    outs, feats = [], []
+    n = np.asarray(pool_x).shape[0]
+    for lo in range(0, n, chunk):
+        x = jnp.asarray(np.asarray(pool_x)[lo:lo + chunk])
+        hidden = model.forward(params, {batch_key: x})
+        logits = jnp.einsum("btd,dv->btv", hidden.astype(jnp.float32),
+                            w.astype(jnp.float32))[:, -1]
+        outs.append(np.asarray(logits, np.float32))
+        feats.append(np.asarray(hidden[:, -1], np.float32))
+    logits = np.concatenate(outs)
+    stats = L.score_stats_from_logits(jnp.asarray(logits))
+    return compat.tree_map(np.asarray, stats), np.concatenate(feats)

@@ -62,6 +62,7 @@ class LiveTask:
     seed: int = 0
     measured_cost: bool = False      # False -> cost = c_u_nominal * |B| (deterministic)
     c_u_nominal: float = 1e-4        # $/sample-iteration when not measuring
+    score_microbatch: int = 2048     # pool-scoring engine microbatch
 
     def __post_init__(self):
         from repro.configs.base import ModelConfig, TrainConfig
@@ -82,6 +83,9 @@ class LiveTask:
                               weight_decay=1e-4, grad_clip=1.0)
         self._params = None
         self._step_cache: Dict[int, object] = {}
+        from repro.core.scoring import PoolScoringEngine, ScoringConfig
+        self._engine = PoolScoringEngine(
+            self.model, ScoringConfig(microbatch=self.score_microbatch))
 
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:
@@ -125,30 +129,29 @@ class LiveTask:
         return self.c_u_nominal * n
 
     # -- scoring ----------------------------------------------------------
-    def _forward_batches(self, idx: np.ndarray, chunk: int = 2048):
-        from repro.models import layers as L
+    # The hot path (score / predict / top-k) runs through the device-
+    # resident PoolScoringEngine; the seed host loop survives as
+    # ``repro.core.scoring.score_pool_reference`` (the oracle the engine
+    # is validated against and benchmarked over).
+
+    def _pool(self, idx: np.ndarray) -> np.ndarray:
         assert self._params is not None, "train() before score()"
-        idx = np.asarray(idx, np.int64)
-        outs, feats = [], []
-        for lo in range(0, len(idx), chunk):
-            x = jnp.asarray(self.features[idx[lo:lo + chunk]].astype(np.float32))
-            hidden = self.model.forward(self._params, {"features": x})
-            logits = jnp.einsum("btd,dc->btc", hidden,
-                                self._params["cls_head"])[:, 0]
-            outs.append(np.asarray(logits, np.float32))
-            feats.append(np.asarray(hidden[:, 0], np.float32))
-        return np.concatenate(outs), np.concatenate(feats)
+        return self.features[np.asarray(idx, np.int64)].astype(np.float32)
 
     def score(self, idx: np.ndarray):
-        from repro.models import layers as L
-        logits, feats = self._forward_batches(idx)
-        stats = L.score_stats_from_logits(jnp.asarray(logits))
-        stats = jax.tree.map(np.asarray, stats)
+        stats, feats = self._engine.score_host(self._params, self._pool(idx))
         return stats, feats
 
+    def topk_candidates(self, metric: str, k: int,
+                        candidates: np.ndarray) -> np.ndarray:
+        """M(.) fast path: device-side top-k over the candidate pool."""
+        rows = self._engine.top_k(self._params, self._pool(candidates), k,
+                                  metric)
+        return np.asarray(candidates, np.int64)[rows]
+
     def predict(self, idx: np.ndarray) -> np.ndarray:
-        logits, _ = self._forward_batches(idx)
-        return np.argmax(logits, axis=-1)
+        stats, _ = self._engine.score_host(self._params, self._pool(idx))
+        return np.asarray(stats.top1, np.int64)
 
     def eval_correct(self, idx: np.ndarray, labels: np.ndarray) -> np.ndarray:
         return self.predict(idx) == np.asarray(labels)

@@ -26,11 +26,13 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 
 def _leaf_files(tree) -> Dict[str, Any]:
-    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    leaves = compat.tree_flatten_with_path(tree)[0]
     return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}
 
 
@@ -77,8 +79,8 @@ def restore(ckpt_dir: str, step: int, like_tree,
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    paths = jax.tree_util.tree_flatten_with_path(like_tree)[0]
-    sh_leaves = (jax.tree.leaves(
+    paths = compat.tree_flatten_with_path(like_tree)[0]
+    sh_leaves = (compat.tree_leaves(
         shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
         if shardings is not None else [None] * len(paths))
     assert len(sh_leaves) == len(paths), (len(sh_leaves), len(paths))
@@ -96,8 +98,8 @@ def restore(ckpt_dir: str, step: int, like_tree,
             out.append(jax.make_array_from_callback(
                 tuple(meta["shape"]), sh,
                 lambda idx, a=arr, dt=dtype: np.asarray(a[idx]).astype(dt)))
-    structure = jax.tree.structure(like_tree)
-    return jax.tree.unflatten(structure, out), manifest
+    structure = compat.tree_structure(like_tree)
+    return compat.tree_unflatten(structure, out), manifest
 
 
 def save_json(path: str, obj: Dict):

@@ -20,6 +20,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def quantize_ef(g: jax.Array, residual: jax.Array
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -52,13 +54,13 @@ def compressed_psum(g: jax.Array, residual: jax.Array, axis_name: str
 
 
 def init_ef_state(grads) -> Dict:
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    return compat.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
 
 
 def tree_compressed_psum(grads, ef_state, axis_name: str):
-    flat_g, treedef = jax.tree.flatten(grads)
-    flat_r = jax.tree.leaves(ef_state)
+    flat_g, treedef = compat.tree_flatten(grads)
+    flat_r = compat.tree_leaves(ef_state)
     outs = [compressed_psum(g, r, axis_name) for g, r in zip(flat_g, flat_r)]
-    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
-    new_r = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_g = compat.tree_unflatten(treedef, [o[0] for o in outs])
+    new_r = compat.tree_unflatten(treedef, [o[1] for o in outs])
     return new_g, new_r

@@ -12,6 +12,8 @@ import math
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+
+from repro import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Logical axis vocabulary ------------------------------------------------
@@ -211,7 +213,7 @@ def logical_to_pspec(
 def tree_pspecs(abstract_tree, logical_tree, mesh: Mesh, policy: str):
     """Map a pytree of ShapeDtypeStructs + matching logical-axes tree
     (tuples of logical names) to a pytree of PartitionSpecs."""
-    return jax.tree.map(
+    return compat.tree_map(
         lambda leaf, logical: logical_to_pspec(leaf.shape, logical, mesh, policy),
         abstract_tree,
         logical_tree,
@@ -224,13 +226,13 @@ def named(mesh: Mesh, spec: P) -> NamedSharding:
 
 
 def tree_named(mesh: Mesh, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+    return compat.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
 
 
 def tree_size_bytes(tree) -> int:
     return sum(
-        math.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree)
+        math.prod(l.shape) * l.dtype.itemsize for l in compat.tree_leaves(tree)
     )
 
 

@@ -239,7 +239,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     with mesh:
         lowered = step.lower(*args)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_d = {

@@ -11,6 +11,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.param import ParamSpec
@@ -161,7 +163,7 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
     ab, _ = cache_specs(cfg, batch, seq_len)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
+    return compat.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
 
 
 def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, tokens: jax.Array,

@@ -14,6 +14,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import mamba2
@@ -61,7 +63,7 @@ def _shared_block(cfg: ModelConfig, p: Dict, x: jax.Array,
 
 def _group_params(cfg: ModelConfig, params: Dict):
     na, per = _n_apps(cfg), cfg.shared_attn_every
-    return jax.tree.map(lambda a: a.reshape((na, per) + a.shape[1:]),
+    return compat.tree_map(lambda a: a.reshape((na, per) + a.shape[1:]),
                         params["mamba_blocks"])
 
 
@@ -154,7 +156,7 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
     ab, _ = cache_specs(cfg, batch, seq_len)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
+    return compat.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
 
 
 def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, tokens,

@@ -14,6 +14,8 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs.base import ModelConfig
 from repro.models.param import ParamSpec
 
@@ -318,7 +320,7 @@ def chunked_score_stats(hidden: jax.Array, w_vocab: jax.Array,
     lse = m + jnp.log(jnp.maximum(s, 1e-30))
     entropy = lse - u / jnp.maximum(s, 1e-30)
     stats = ScoreStats(margin=v1 - v2, entropy=entropy, max_logprob=v1 - lse, top1=i1)
-    return jax.tree.map(lambda a: a.reshape(lead), stats)
+    return compat.tree_map(lambda a: a.reshape(lead), stats)
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array,

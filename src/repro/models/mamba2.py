@@ -15,6 +15,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -281,7 +283,7 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
     ab, _ = cache_specs(cfg, batch, seq_len)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
+    return compat.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
 
 
 def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,

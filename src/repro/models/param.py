@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class ParamSpec:
@@ -44,10 +46,10 @@ def _stddev(spec: ParamSpec) -> float:
 
 def init_params(specs: Dict, rng: jax.Array) -> Dict:
     """Materialize a spec tree into real arrays (deterministic per path)."""
-    leaves, treedef = jax.tree.flatten_with_path(specs, is_leaf=_is_spec)
+    leaves, treedef = compat.tree_flatten_with_path(specs, is_leaf=_is_spec)
     out = []
     for path, spec in leaves:
-        key = jax.random.fold_in(rng, abs(hash(jax.tree_util.keystr(path))) % (2**31))
+        key = jax.random.fold_in(rng, abs(hash(compat.keystr(path))) % (2**31))
         if spec.init == "zeros":
             arr = jnp.zeros(spec.shape, spec.dtype)
         elif spec.init == "ones":
@@ -55,18 +57,20 @@ def init_params(specs: Dict, rng: jax.Array) -> Dict:
         else:
             arr = (jax.random.normal(key, spec.shape, jnp.float32) * _stddev(spec)).astype(spec.dtype)
         out.append(arr)
-    return jax.tree.unflatten(jax.tree.structure(specs, is_leaf=_is_spec), out)
+    return compat.tree_unflatten(
+        compat.tree_structure(specs, is_leaf=_is_spec), out)
 
 
 def abstract_params(specs: Dict) -> Dict:
-    return jax.tree.map(
+    return compat.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
     )
 
 
 def logical_axes(specs: Dict) -> Dict:
-    return jax.tree.map(lambda s: s.logical, specs, is_leaf=_is_spec)
+    return compat.tree_map(lambda s: s.logical, specs, is_leaf=_is_spec)
 
 
 def param_count(specs: Dict) -> int:
-    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+    return sum(int(np.prod(s.shape))
+               for s in compat.tree_leaves(specs, is_leaf=_is_spec))

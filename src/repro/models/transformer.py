@@ -21,12 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-try:  # jax >= 0.7 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.compat import shard_map as _shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
@@ -433,11 +431,11 @@ def _scan_blocks(cfg: ModelConfig, params: Dict, x: jax.Array,
 
         chunk_body = jax.checkpoint(chunk_body,
                                     policy=jax.checkpoint_policies.nothing_saveable)
-        reshaped = jax.tree.map(lambda a: a.reshape((nl // k, k) + a.shape[1:]), blocks)
+        reshaped = compat.tree_map(lambda a: a.reshape((nl // k, k) + a.shape[1:]), blocks)
         rflags = flags.reshape(nl // k, k)
         x, caches = jax.lax.scan(chunk_body, x, (reshaped, rflags))
         if with_cache:
-            caches = jax.tree.map(
+            caches = compat.tree_map(
                 lambda a: a.reshape((nl,) + a.shape[2:]), caches)
     elif cfg.scan_layers:
         if cfg.remat == "layer":
@@ -448,10 +446,10 @@ def _scan_blocks(cfg: ModelConfig, params: Dict, x: jax.Array,
         fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
             if cfg.remat == "layer" else body
         for i in range(cfg.num_layers):
-            p_i = jax.tree.map(lambda a: a[i], blocks)
+            p_i = compat.tree_map(lambda a: a[i], blocks)
             x, c = fn(x, (p_i, flags[i]))
             caches_list.append(c)
-        caches = jax.tree.map(lambda *cs: jnp.stack(cs), *caches_list) if with_cache else None
+        caches = compat.tree_map(lambda *cs: jnp.stack(cs), *caches_list) if with_cache else None
     return x, (caches if with_cache else None)
 
 
@@ -516,7 +514,7 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
     ab, _ = cache_specs(cfg, batch, seq_len)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
+    return compat.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), ab)
 
 
 def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,

@@ -39,6 +39,30 @@ def make_prefill_step(model: Model, mesh=None, policy: str = "tp"):
     return jax.jit(step, in_shardings=(p_sh, None))
 
 
+def make_scoring_step(model: Model, mesh=None, policy: str = "tp",
+                      head_mode: str = "auto"):
+    """jitted (params, batch) -> last-position :class:`ScoreStats`.
+
+    MCAL's machine-labeling pass over the remaining pool is this step
+    swept batch-by-batch: forward + vocab head fused into packed
+    uncertainty statistics (margin/entropy/max-logprob/top1) without
+    materializing (B, V) logits in HBM for large vocabularies.
+    """
+    from repro.core.scoring import head_stats, resolve_head_weight
+
+    def step(params, batch):
+        hidden = model.forward(params, batch, mesh=mesh)
+        h = hidden[:, -1, :].astype(jnp.float32)
+        w = resolve_head_weight(model.cfg, params)
+        return head_stats(h, w.astype(jnp.float32), mode=head_mode)
+
+    if mesh is None:
+        return jax.jit(step)
+    ab_p, lg_p = model.abstract_params(), model.logical_axes()
+    p_sh = shd.tree_named(mesh, shd.tree_pspecs(ab_p, lg_p, mesh, policy))
+    return jax.jit(step, in_shardings=(p_sh, None))
+
+
 def make_decode_step(model: Model, mesh=None, policy: str = "tp",
                      donate_cache: bool = True):
     """jitted (params, cache, tokens, cache_len) -> (logits, new_cache)."""
@@ -66,6 +90,7 @@ class ServeEngine:
         self.mesh = mesh
         self._prefill = make_prefill_step(model, mesh, policy)
         self._decode = make_decode_step(model, mesh, policy)
+        self._score = make_scoring_step(model, mesh, policy)
 
     def prefill(self, batch: Dict) -> Tuple[jax.Array, Dict, int]:
         logits, cache = self._prefill(self.params, batch)
@@ -73,6 +98,11 @@ class ServeEngine:
         full = self.model.init_cache(self.batch_size, self.max_seq)
         full = _load_cache(self.model.cfg, full, cache)
         return logits, full, T
+
+    def score(self, batch: Dict):
+        """Last-position ScoreStats for one batch (MCAL machine-labeling
+        pass — sweep the remaining pool through this)."""
+        return self._score(self.params, batch)
 
     def generate(self, batch: Dict, steps: int,
                  sampler: str = "greedy") -> jax.Array:

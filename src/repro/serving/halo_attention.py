@@ -19,12 +19,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
 
 from repro.models.layers import blockwise_attention
 

@@ -22,12 +22,10 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.compat import shard_map as _shard_map
 
 from repro.configs.base import TrainConfig
 from repro.training import optimizer as opt
@@ -37,7 +35,7 @@ from repro.training.train_loop import loss_fn
 
 def init_ef_state(params) -> Dict:
     """Per-shard f32 residual tree (replicated layout, per-device values)."""
-    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return compat.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
 def make_compressed_dp_train_step(model, tc: TrainConfig, mesh,
@@ -59,7 +57,7 @@ def make_compressed_dp_train_step(model, tc: TrainConfig, mesh,
         # int8 + EF over the slow axis; exact psum over the rest
         grads, new_ef = tree_compressed_psum(grads, ef, compress_axis)
         for ax in plain_axes:
-            grads = jax.tree.map(lambda g: jax.lax.pmean(g, ax), grads)
+            grads = compat.tree_map(lambda g: jax.lax.pmean(g, ax), grads)
         loss = jax.lax.pmean(loss, dp_axes)
         grads, gnorm = opt.clip_by_global_norm(grads, tc.grad_clip)
         lr = sched(stepc)

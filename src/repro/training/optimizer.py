@@ -1,6 +1,6 @@
 """AdamW in pure JAX with giant-model memory levers.
 
-Per-leaf optimizer slots (a list aligned with ``jax.tree.leaves(params)``):
+Per-leaf optimizer slots (a list aligned with ``compat.tree_leaves(params)``):
 
 * first moment ``m`` stored in ``moment_dtype`` — float32 / bfloat16 / int8
   (int8 uses symmetric per-tensor scaling, requantized each step);
@@ -19,6 +19,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 from repro.configs.base import TrainConfig
@@ -132,8 +134,8 @@ def _second_moment(slot: Dict, g2: jax.Array, b2: jax.Array) -> jax.Array:
 def adamw_update(params, grads, slots: List[Dict], step: jax.Array,
                  lr: jax.Array, tc: TrainConfig):
     """One AdamW step.  ``slots`` is leaf-aligned with ``params``."""
-    p_leaves, treedef = jax.tree.flatten(params)
-    g_leaves = jax.tree.leaves(grads)
+    p_leaves, treedef = compat.tree_flatten(params)
+    g_leaves = compat.tree_leaves(grads)
     assert len(p_leaves) == len(g_leaves) == len(slots)
     b1, b2 = jnp.float32(tc.beta1), jnp.float32(tc.beta2)
     t = (step + 1).astype(jnp.float32)
@@ -152,16 +154,16 @@ def adamw_update(params, grads, slots: List[Dict], step: jax.Array,
             update = update + tc.weight_decay * p.astype(jnp.float32)
         new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
         new_slots.append(slot)
-    return jax.tree.unflatten(treedef, new_p), new_slots
+    return compat.tree_unflatten(treedef, new_p), new_slots
 
 
 def clip_by_global_norm(grads, max_norm: float):
-    leaves = jax.tree.leaves(grads)
+    leaves = compat.tree_leaves(grads)
     gnorm = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
     if max_norm <= 0:
         return grads, gnorm
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
-    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+    return compat.tree_map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
                         grads), gnorm
 
 

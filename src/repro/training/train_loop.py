@@ -16,6 +16,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.distributed import sharding as shd
 from repro.models import layers as L
@@ -67,13 +69,13 @@ def loss_fn(model, params: Dict, batch: Dict, mesh=None) -> jax.Array:
 
 def init_train_state(model, tc: TrainConfig, rng: jax.Array) -> Dict:
     params = model.init(rng)
-    slots = opt.init_slots(jax.tree.leaves(params), tc)
+    slots = opt.init_slots(compat.tree_leaves(params), tc)
     return {"params": params, "opt": slots, "step": jnp.zeros((), jnp.int32)}
 
 
 def _leaf_specs(model) -> list:
     """[(shape, logical)] per param leaf, leaf-aligned with tree.leaves."""
-    spec_leaves = jax.tree.leaves(model.specs, is_leaf=_is_spec)
+    spec_leaves = compat.tree_leaves(model.specs, is_leaf=_is_spec)
     return [(s.shape, s.logical) for s in spec_leaves]
 
 
@@ -120,14 +122,14 @@ def make_train_step(model, tc: TrainConfig, mesh=None, jit: bool = True):
                 tot_loss, tot_g = carry
                 l, g = grads_of(params, mb)
                 return (tot_loss + l,
-                        jax.tree.map(lambda a, b: a + b.astype(acc_dt),
+                        compat.tree_map(lambda a, b: a + b.astype(acc_dt),
                                      tot_g, g)), None
 
-            zeros = jax.tree.map(
+            zeros = compat.tree_map(
                 lambda p: jnp.zeros(p.shape, acc_dt), params)
             (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zeros), micro)
             loss = loss / tc.grad_accum
-            grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
+            grads = compat.tree_map(lambda g: g / tc.grad_accum, grads)
         else:
             loss, grads = grads_of(params, batch)
         grads, gnorm = opt.clip_by_global_norm(grads, tc.grad_clip)

@@ -20,8 +20,8 @@ from repro.training.compressed_dp import (init_ef_state,
                                           make_compressed_dp_train_step)
 from repro.training.train_loop import init_train_state, make_train_step
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("data",), axis_types=True)
 cfg = get_smoke("qwen2-1.5b")
 model = get_model(cfg)
 tc = TrainConfig(learning_rate=1e-2, schedule="constant")

@@ -1,10 +1,20 @@
-"""Cost models (paper Eqn. 4) + ledger."""
+"""Cost models (paper Eqn. 4) + ledger.
+
+Property-style cases run from a seeded deterministic grid so the suite is
+self-contained; when ``hypothesis`` happens to be installed the same
+properties are additionally fuzzed.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cost import (AMAZON, SATYAM, CostLedger, LabelingService,
                              TrainCostModel, schedule_sizes)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
 
 
 def test_eqn4_closed_form_matches_schedule_sum():
@@ -25,10 +35,7 @@ def test_cubic_variant():
         1e-7 * float(np.sum(sizes.astype(float) ** 2)))
 
 
-@settings(max_examples=40, deadline=None)
-@given(start=st.integers(0, 5000), gap=st.integers(1, 20000),
-       delta=st.integers(100, 5000))
-def test_property_grow_cost_consistency(start, gap, delta):
+def _check_grow_cost_consistency(start, gap, delta):
     """cost_to_grow == sum of per-iteration costs of the actual schedule."""
     cm = TrainCostModel(c_u=0.01, exponent=1)
     end = start + gap
@@ -36,6 +43,30 @@ def test_property_grow_cost_consistency(start, gap, delta):
     sizes = np.minimum(start + delta * np.arange(1, m + 1), end)
     assert cm.cost_to_grow(start, end, delta) == pytest.approx(
         0.01 * float(np.sum(sizes)), rel=1e-9)
+
+
+def _grow_cases(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    cases = [(0, 1, 100), (0, 20000, 100), (5000, 1, 5000),
+             (5000, 20000, 5000), (0, 100, 100), (1234, 999, 1000)]
+    while len(cases) < n:
+        cases.append((int(rng.integers(0, 5001)),
+                      int(rng.integers(1, 20001)),
+                      int(rng.integers(100, 5001))))
+    return cases
+
+
+@pytest.mark.parametrize("start,gap,delta", _grow_cases())
+def test_grow_cost_consistency(start, gap, delta):
+    _check_grow_cost_consistency(start, gap, delta)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(start=st.integers(0, 5000), gap=st.integers(1, 20000),
+           delta=st.integers(100, 5000))
+    def test_property_grow_cost_consistency(start, gap, delta):
+        _check_grow_cost_consistency(start, gap, delta)
 
 
 def test_fit_recovers_cu():

@@ -15,10 +15,7 @@ from repro.distributed.compression import (compressed_psum, init_ef_state,
 from repro.distributed.straggler import StragglerMonitor
 from repro.launch.mesh import make_host_mesh
 
-try:
-    from jax import shard_map as _sm
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _sm
+from repro.compat import shard_map as _sm
 
 
 def test_checkpoint_roundtrip_and_latest():

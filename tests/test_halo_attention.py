@@ -16,8 +16,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.models.layers import blockwise_attention
 from repro.serving.halo_attention import halo_window_attention
 
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("model",), axis_types=True)
 rng = np.random.default_rng(0)
 results = {}
 for (B, T, H, Hk, hd, w) in [(2, 128, 4, 4, 16, 16), (1, 256, 4, 2, 8, 64),

@@ -18,8 +18,8 @@ from repro.configs.base import ModelConfig
 from repro.models.transformer import moe_block, moe_specs
 from repro.models.param import init_params
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"), axis_types=True)
 base = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
                    num_heads=4, num_kv_heads=2, d_ff=16, vocab_size=64,
                    num_experts=4, experts_per_token=2,

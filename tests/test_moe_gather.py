@@ -20,8 +20,8 @@ from repro.configs.base import ShapeConfig
 from repro.models.registry import get_model
 from repro.training.train_loop import init_train_state, make_sharded_train_step
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"), axis_types=True)
 base = ModelConfig(name="m", family="moe", num_layers=2, d_model=32,
                    num_heads=4, num_kv_heads=2, head_dim=8, d_ff=16,
                    vocab_size=128, num_experts=4, experts_per_token=2,

@@ -1,9 +1,19 @@
-"""Truncated power-law model (paper Eqn. 3): fit recovery + properties."""
+"""Truncated power-law model (paper Eqn. 3): fit recovery + properties.
+
+Property-style cases run from a seeded deterministic grid so the suite is
+self-contained; when ``hypothesis`` happens to be installed the same
+properties are additionally fuzzed.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.powerlaw import EPS_FLOOR, PowerLaw, fit_power_law, required_size
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
 
 SIZES = np.asarray([200, 500, 1000, 2000, 4000, 8000, 16000, 32000], float)
 
@@ -61,10 +71,7 @@ def test_eps_floor():
     assert np.all(fit.predict(SIZES) >= EPS_FLOOR / 10)
 
 
-@settings(max_examples=60, deadline=None)
-@given(alpha=st.floats(0.1, 50), gamma=st.floats(0.0, 1.0),
-       logk=st.floats(3.5, 7.0))
-def test_property_fit_recovers_family(alpha, gamma, logk):
+def _check_fit_recovers_family(alpha, gamma, logk):
     """Noiseless members of the family are fixed points of the fit."""
     true = PowerLaw(alpha=alpha, gamma=gamma, k=10.0 ** logk)
     y = true.predict(SIZES)
@@ -74,15 +81,62 @@ def test_property_fit_recovers_family(alpha, gamma, logk):
     np.testing.assert_allclose(fit.predict(SIZES), y, rtol=1e-4)
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.floats(0.01, 0.9), min_size=4, max_size=8))
-def test_property_prediction_monotone_nonincreasing(errs):
+def _family_cases(n=60, seed=0):
+    rng = np.random.default_rng(seed)
+    cases = [(0.1, 0.0, 3.5), (50.0, 1.0, 7.0), (1.0, 0.5, 5.0),
+             (0.1, 1.0, 3.5), (50.0, 0.0, 7.0), (10.0, 0.3, 4.2)]
+    while len(cases) < n:
+        cases.append((float(rng.uniform(0.1, 50)),
+                      float(rng.uniform(0.0, 1.0)),
+                      float(rng.uniform(3.5, 7.0))))
+    return [tuple(round(v, 6) for v in c) for c in cases]
+
+
+@pytest.mark.parametrize("alpha,gamma,logk", _family_cases())
+def test_fit_recovers_family(alpha, gamma, logk):
+    _check_fit_recovers_family(alpha, gamma, logk)
+
+
+def _check_prediction_monotone_nonincreasing(errs):
     """Fitted family is always monotone non-increasing in n."""
     sizes = SIZES[: len(errs)]
     fit = fit_power_law(sizes, errs)
     grid = np.linspace(sizes[0], sizes[-1] * 4, 64)
     pred = fit.predict(grid)
     assert np.all(np.diff(pred) <= 1e-12)
+
+
+def _err_list_cases(n=40, seed=1):
+    rng = np.random.default_rng(seed)
+    cases = [
+        [0.9, 0.9, 0.9, 0.9],                       # flat
+        [0.9, 0.5, 0.3, 0.2, 0.15, 0.12, 0.11, 0.1],  # clean decay
+        [0.01, 0.9, 0.01, 0.9],                     # adversarial zig-zag
+        [0.5, 0.6, 0.7, 0.8],                       # increasing (fit must clip)
+    ]
+    while len(cases) < n:
+        m = int(rng.integers(4, 9))
+        cases.append([float(v) for v in
+                      np.round(rng.uniform(0.01, 0.9, m), 6)])
+    return cases
+
+
+@pytest.mark.parametrize("errs", _err_list_cases())
+def test_prediction_monotone_nonincreasing(errs):
+    _check_prediction_monotone_nonincreasing(errs)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(alpha=st.floats(0.1, 50), gamma=st.floats(0.0, 1.0),
+           logk=st.floats(3.5, 7.0))
+    def test_property_fit_recovers_family(alpha, gamma, logk):
+        _check_fit_recovers_family(alpha, gamma, logk)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.floats(0.01, 0.9), min_size=4, max_size=8))
+    def test_property_prediction_monotone_nonincreasing(errs):
+        _check_prediction_monotone_nonincreasing(errs)
 
 
 def test_required_size_bisection():

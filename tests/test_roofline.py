@@ -8,7 +8,8 @@ import pytest
 
 from repro.configs import ARCH_IDS, cells, get_config
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
-from repro.launch.roofline import (analyze_cell, forward_flops, param_counts)
+from repro.compat import cost_analysis_dict
+from repro.launch.roofline import analyze_cell, forward_flops, param_counts
 from repro.models.registry import get_model
 
 
@@ -27,7 +28,7 @@ def _xla_flops(cfg, B, T, train: bool):
         params = model.abstract_params()
         fn = jax.jit(lambda p, t: model.forward(p, {"tokens": t}))
         lowered = fn.lower(params, jax.ShapeDtypeStruct((B, T), jnp.int32))
-    return lowered.compile().cost_analysis().get("flops", 0.0)
+    return cost_analysis_dict(lowered.compile()).get("flops", 0.0)
 
 
 @pytest.mark.parametrize("nl,d,h,ff,v", [(4, 256, 4, 1024, 1024),

@@ -1,11 +1,21 @@
-"""Joint (|B|, theta) search + delta adaptation vs brute force."""
+"""Joint (|B|, theta) search + delta adaptation vs brute force.
+
+Property-style cases run from a seeded deterministic grid so the suite is
+self-contained; when ``hypothesis`` happens to be installed the same
+properties are additionally fuzzed.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cost import AMAZON, LabelingService, TrainCostModel
 from repro.core.powerlaw import PowerLaw
 from repro.core.search import adapt_delta, budget_search, joint_search
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
 
 THETAS = tuple(round(0.1 * i, 1) for i in range(1, 11))
 
@@ -29,12 +39,7 @@ def _brute_force(pool, test, cur, spent, laws, cm, delta, svc, eps):
     return best
 
 
-@settings(max_examples=25, deadline=None)
-@given(alpha=st.floats(1.0, 30.0), gamma=st.floats(0.2, 0.7),
-       q=st.floats(0.5, 4.0), cu=st.floats(1e-4, 1e-2),
-       cur_frac=st.floats(0.01, 0.3))
-def test_property_joint_search_matches_brute_force(alpha, gamma, q, cu,
-                                                   cur_frac):
+def _check_joint_search_matches_brute_force(alpha, gamma, q, cu, cur_frac):
     pool, test = 20_000, 1_000
     cur = int(cur_frac * pool)
     delta = 500
@@ -50,6 +55,37 @@ def test_property_joint_search_matches_brute_force(alpha, gamma, q, cu,
     assert res.cost == pytest.approx(bf_cost, rel=1e-6)
     if res.theta_opt > 0:
         assert res.B_opt == bf_B and res.theta_opt == pytest.approx(bf_t)
+
+
+def _search_cases(n=25, seed=0):
+    rng = np.random.default_rng(seed)
+    cases = [(1.0, 0.2, 0.5, 1e-4, 0.01),    # corners of the strategy box
+             (30.0, 0.7, 4.0, 1e-2, 0.3),
+             (1.0, 0.7, 4.0, 1e-4, 0.3),
+             (30.0, 0.2, 0.5, 1e-2, 0.01),
+             (8.0, 0.45, 1.5, 4e-3, 0.1)]
+    while len(cases) < n:
+        cases.append((float(rng.uniform(1.0, 30.0)),
+                      float(rng.uniform(0.2, 0.7)),
+                      float(rng.uniform(0.5, 4.0)),
+                      float(10.0 ** rng.uniform(-4, -2)),
+                      float(rng.uniform(0.01, 0.3))))
+    return [tuple(round(v, 6) for v in c) for c in cases]
+
+
+@pytest.mark.parametrize("alpha,gamma,q,cu,cur_frac", _search_cases())
+def test_joint_search_matches_brute_force(alpha, gamma, q, cu, cur_frac):
+    _check_joint_search_matches_brute_force(alpha, gamma, q, cu, cur_frac)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(alpha=st.floats(1.0, 30.0), gamma=st.floats(0.2, 0.7),
+           q=st.floats(0.5, 4.0), cu=st.floats(1e-4, 1e-2),
+           cur_frac=st.floats(0.01, 0.3))
+    def test_property_joint_search_matches_brute_force(alpha, gamma, q, cu,
+                                                       cur_frac):
+        _check_joint_search_matches_brute_force(alpha, gamma, q, cu, cur_frac)
 
 
 def test_search_falls_back_to_human_all():

@@ -1,10 +1,20 @@
-"""Selection metrics M(.) / L(.) (paper §3.3)."""
+"""Selection metrics M(.) / L(.) (paper §3.3).
+
+Property-style cases run from a seeded deterministic grid so the suite is
+self-contained; when ``hypothesis`` happens to be installed the same
+properties are additionally fuzzed.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import selection as sel
 from repro.models.layers import ScoreStats
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
 
 
 def _stats(margin, entropy=None, maxlp=None):
@@ -39,10 +49,7 @@ def test_entropy_and_least_confidence():
                                    candidates=cand)[0] == 1
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(0.0, 10.0), min_size=5, max_size=40, unique=True),
-       st.integers(1, 5))
-def test_property_selection_permutation_invariant(margins, k):
+def _check_selection_permutation_invariant(margins, k):
     """The selected SET is invariant to candidate permutation."""
     k = min(k, len(margins))
     stats = _stats(margins)
@@ -54,6 +61,31 @@ def test_property_selection_permutation_invariant(margins, k):
     b = set(sel.select_for_training("margin", k, stats=stats_p,
                                     candidates=cand[perm]))
     assert a == b
+
+
+def _margin_cases(n=30, seed=2):
+    rng = np.random.default_rng(seed)
+    cases = []
+    while len(cases) < n:
+        m = int(rng.integers(5, 41))
+        margins = rng.permutation(np.round(np.linspace(0, 10, m)
+                                           + rng.uniform(0, 0.01, m), 6))
+        cases.append(([float(v) for v in margins], int(rng.integers(1, 6))))
+    return cases
+
+
+@pytest.mark.parametrize("margins,k", _margin_cases())
+def test_selection_permutation_invariant(margins, k):
+    _check_selection_permutation_invariant(margins, k)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(0.0, 10.0), min_size=5, max_size=40,
+                    unique=True),
+           st.integers(1, 5))
+    def test_property_selection_permutation_invariant(margins, k):
+        _check_selection_permutation_invariant(margins, k)
 
 
 def test_kcenter_spreads():

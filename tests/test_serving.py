@@ -45,3 +45,29 @@ def test_generate_matches_forward_first_token(arch):
     logits = model.logits(params, hidden[:, -1:, :])
     want = np.argmax(np.asarray(logits[:, 0], np.float32), axis=-1)
     np.testing.assert_array_equal(np.asarray(out[:, 0]), want)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma3-4b"])  # untied + tied
+def test_score_matches_forward_stats(arch):
+    """ServeEngine.score (the machine-labeling step) == ScoreStats of the
+    materialized last-position logits (fp32 head, the scoring convention)."""
+    from repro.core.scoring import resolve_head_weight
+    from repro.models.layers import score_stats_from_logits
+
+    cfg = get_smoke(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(1)
+    batch = _batch(cfg, 2, 12, rng)
+    eng = ServeEngine(model, params, max_seq=24, batch_size=2)
+    stats = eng.score(batch)
+    hidden = model.forward(params, batch)
+    h = hidden[:, -1, :].astype(jnp.float32)
+    w = resolve_head_weight(cfg, params).astype(jnp.float32)
+    ref = score_stats_from_logits(jnp.einsum("bd,dv->bv", h, w))
+    np.testing.assert_allclose(np.asarray(stats.margin),
+                               np.asarray(ref.margin), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stats.entropy),
+                               np.asarray(ref.entropy), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(stats.top1),
+                                  np.asarray(ref.top1))
