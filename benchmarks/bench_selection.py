@@ -11,6 +11,11 @@ Pool scoring: the jit-compiled device-resident engine vs the seed host
 loop over a >= 50k pool — MCAL's per-iteration hot path (the engine must
 be >= 2x; in practice it is an order of magnitude on one host device).
 
+k-center: the device greedy farthest-point engine
+(``core.selection_device``) vs the host ``k_center_greedy`` loop at a
+50k x 256 pool — exact chosen-index agreement asserted, >= 2x speedup
+floor enforced in CI (``--kcenter``).
+
 Runs on a LIVE task (real JAX MLP over synthetic features) so the ranking
 actually comes from a trained classifier, not the emulator.
 """
@@ -18,10 +23,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, timed
+from benchmarks.common import Row, timed, timed_best
 from repro.core import (AMAZON, MCALConfig, LiveTask, PoolScoringEngine,
                         ScoringConfig, run_mcal, score_pool_reference)
-from repro.core.selection import machine_label_error_curve
+from repro.core.selection import k_center_greedy, machine_label_error_curve
 from repro.data.synth import make_classification
 
 
@@ -63,8 +68,53 @@ def run_scoring(pool: int = 50_000, dim: int = 32, classes: int = 10,
     return rows
 
 
+def run_kcenter(pool: int = 50_000, dim: int = 256, k: int = 64,
+                n_anchors: int = 16, enforce: bool = False) -> list:
+    """Device k-center engine vs the host greedy loop at a 50k x 256 pool.
+
+    Features are integer-valued float32 so every squared distance is exact
+    and the two engines must return the IDENTICAL chosen-index sequence
+    (the oracle contract of tests/test_selection_device.py) — asserted
+    here too, so the speedup row can never come from a wrong answer.  The
+    device leg times device-resident features (in MCAL they are emitted by
+    the scoring sweep and never visit the host); the host loop pays its
+    own numpy-side layout, as the seed implementation did.
+
+    ``enforce`` turns the >= 2x speedup into a hard assert (the CI gate).
+    """
+    import jax.numpy as jnp
+    from repro.core.selection_device import k_center_greedy_device
+
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 8, size=(pool, dim)).astype(np.float32)
+    anchors = rng.integers(0, 8, size=(n_anchors, dim)).astype(np.float32)
+    x_dev = jnp.asarray(x)
+
+    k_center_greedy_device(x_dev, k, anchors=anchors)   # compile/warm
+    host_sel, us_host = timed_best(k_center_greedy, x, k, anchors=anchors,
+                                   repeat=3)
+    dev_sel, us_dev = timed_best(k_center_greedy_device, x_dev, k,
+                                 anchors=anchors, repeat=3)
+    assert np.array_equal(host_sel, dev_sel), \
+        "device k-center diverged from the host oracle"
+
+    speedup = us_host / us_dev
+    rows = [
+        Row(f"kcenter_host_{pool}x{dim}_k{k}", us_host,
+            f"{pool * k / (us_host / 1e6):.0f}cand*centers/s"),
+        Row(f"kcenter_device_{pool}x{dim}_k{k}", us_dev,
+            f"{pool * k / (us_dev / 1e6):.0f}cand*centers/s;"
+            f"speedup={speedup:.1f}x"),
+    ]
+    if enforce:
+        assert speedup >= 2.0, \
+            f"device k-center only {speedup:.2f}x over host loop"
+    return rows
+
+
 def run():
     rows = list(run_scoring())
+    rows += run_kcenter()
     x, y = make_classification(4000, num_classes=10, dim=32,
                                difficulty=0.35, seed=1)
 
@@ -98,8 +148,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scoring-only", action="store_true",
                     help="only the pool-scoring throughput rows (CI smoke)")
+    ap.add_argument("--kcenter", action="store_true",
+                    help="only the k-center engine rows, speedup floor "
+                         "enforced (CI smoke)")
     ap.add_argument("--pool", type=int, default=50_000)
     args = ap.parse_args()
-    for r in (run_scoring(pool=args.pool, enforce=True)
-              if args.scoring_only else run()):
+    if args.kcenter:
+        rows = run_kcenter(pool=args.pool, enforce=True)
+    elif args.scoring_only:
+        rows = run_scoring(pool=args.pool, enforce=True)
+    else:
+        rows = run()
+    for r in rows:
         print(r.csv())

@@ -7,6 +7,8 @@ Public API:
     fit_power_law / PowerLaw          Eqn. 3 error model
     TrainCostModel / LabelingService  Eqn. 4 + $ models
     joint_search / budget_search      (|B|, theta) optimization
+    PoolScoringEngine                 device-resident pool-scoring sweep
+    k_center_greedy_device            device-resident k-center M(.) engine
 """
 from repro.core.cost import (AMAZON, SATYAM, SERVICES, CostLedger,
                              LabelingService, TrainCostModel)
@@ -18,5 +20,7 @@ from repro.core.search import (SearchResult, adapt_delta, budget_search,
                                joint_search)
 from repro.core.scoring import (PoolScoringEngine, ScoringConfig,
                                 score_pool_reference)
+from repro.core.selection_device import (KCenterConfig,
+                                         k_center_greedy_device)
 from repro.core.task import LiveTask
 from repro.core import selection  # noqa: F401

@@ -88,6 +88,17 @@ class EmulatedTask:
         feats = np.stack([conf, self.u[idx]], axis=1)
         return stats, feats
 
+    def kcenter_candidates(self, k: int, candidates: np.ndarray,
+                           anchors: Optional[np.ndarray] = None):
+        """Device k-center M(.) over the emulated feature space — same
+        fast path the engine-backed LiveTask takes, so paper-scale replay
+        campaigns exercise ``core.selection_device`` at pool size."""
+        from repro.core.selection_device import k_center_greedy_device
+        _, feats = self.score(candidates)
+        rows = k_center_greedy_device(feats, k, anchors=anchors)
+        picked = np.asarray(candidates, np.int64)[rows]
+        return picked, np.asarray(feats, np.float32)[rows]
+
     def predict(self, idx: np.ndarray) -> np.ndarray:
         idx = np.asarray(idx, np.int64)
         wrong = self._wrong(idx)

@@ -305,14 +305,27 @@ class MCALCampaign:
 
     def _rank_candidates(self, k: int, cand: np.ndarray, *,
                          commit_anchors: bool = True) -> np.ndarray:
-        """M(.): pick ``k`` of ``cand``.  Uncertainty metrics take the
-        device fast path when the task is engine-backed (top-k computed on
-        device, no pool-wide stats transfer); k-center and random fall back
-        to the host reference path.  ``commit_anchors=False`` leaves the
-        k-center anchor state untouched (proposal-only ranking)."""
+        """M(.): pick ``k`` of ``cand``.  Engine-backed tasks take device
+        fast paths — uncertainty metrics via device top-k (no pool-wide
+        stats transfer), k-center via the device greedy farthest-point
+        engine over device-resident features (``core.selection_device``);
+        random and tasks without an engine fall back to the host reference
+        path.  ``commit_anchors=False`` leaves the k-center anchor state
+        untouched (proposal-only ranking)."""
         if self.cfg.metric in sel.UNCERTAINTY_METRICS and \
                 hasattr(self.task, "topk_candidates"):
             return self.task.topk_candidates(self.cfg.metric, k, cand)
+        if self.cfg.metric == "kcenter" and \
+                hasattr(self.task, "kcenter_candidates"):
+            if k <= 0:
+                return np.zeros((0,), np.int64)
+            pick, new_anchors = self.task.kcenter_candidates(
+                k, cand, anchors=self._anchor_feats)
+            if commit_anchors:
+                self._anchor_feats = (
+                    new_anchors if self._anchor_feats is None
+                    else np.concatenate([self._anchor_feats, new_anchors]))
+            return pick
         stats = feats = None
         if self.cfg.metric in sel.UNCERTAINTY_METRICS or \
                 self.cfg.metric == "kcenter":

@@ -22,7 +22,12 @@ This engine runs the whole pool as ONE jit-compiled program:
   every MCAL iteration;
 * the padded pool buffer is donated to the computation (where the backend
   supports donation) and top-k candidate selection happens on device
-  (``lax.top_k`` over the packed scores, padding masked to -inf).
+  (``lax.top_k`` over the packed scores, padding masked to -inf);
+* the same sweep optionally emits pooled last-hidden-state features
+  (``ScoringConfig.with_features`` / :meth:`PoolScoringEngine.pool_features`)
+  which stay device-resident — the k-center selection engine
+  (``core.selection_device``) consumes them for M(.) without a host
+  round-trip.
 
 The seed's host loop is preserved as :func:`score_pool_reference` — the
 oracle the engine is validated against (tests/test_scoring.py) and the
@@ -47,6 +52,13 @@ from repro import compat
 from repro.core.selection import UNCERTAINTY_METRICS  # noqa: F401 (re-export)
 from repro.models import layers as L
 from repro.models.layers import ScoreStats
+
+
+def next_pow2(n: int) -> int:
+    """The pow2 bucketing primitive shared by every device engine that
+    pads pools for compile-cache reuse (:meth:`PoolScoringEngine._pack`,
+    ``selection_device.k_center_greedy_device``)."""
+    return 1 << max(n - 1, 0).bit_length()
 
 
 def resolve_head_weight(cfg, params) -> jax.Array:
@@ -182,7 +194,10 @@ class PoolScoringEngine:
 
         stats, feats = jax.lax.map(body, xs)
         stats = compat.tree_map(lambda a: a.reshape(-1), stats)
-        return stats, feats.reshape(-1, feats.shape[-1])
+        # explicit shape: reshape(-1, D) divides by D, which is 0 when
+        # feature emission is disabled
+        return stats, feats.reshape(
+            (feats.shape[0] * feats.shape[1], feats.shape[2]))
 
     # -- pool plumbing -----------------------------------------------------
 
@@ -193,10 +208,6 @@ class PoolScoringEngine:
         candidate set shrinks across iterations."""
         x = jnp.asarray(pool_x)
         n = x.shape[0]
-
-        def next_pow2(c: int) -> int:
-            return 1 << max(c - 1, 0).bit_length()
-
         if n >= self.cfg.microbatch:
             mb = self.cfg.microbatch
             n_mb = next_pow2(math.ceil(n / mb))
@@ -221,6 +232,18 @@ class PoolScoringEngine:
         xs, n = self._pack(pool_x)
         stats, feats = self._score_all(params, xs)
         return (compat.tree_map(lambda a: a[:n], stats), feats[:n])
+
+    def pool_features(self, params, pool_x) -> jax.Array:
+        """Device-resident (N, D) pooled last-hidden features from the same
+        jit-compiled sweep (identical microbatching / compile cache / mesh
+        sharding as :meth:`score`).  The k-center selection engine
+        (``core.selection_device``) consumes these directly — features
+        never round-trip through the host."""
+        if not self.cfg.with_features:
+            raise ValueError(
+                "engine built with with_features=False emits no features; "
+                "construct it with ScoringConfig(with_features=True)")
+        return self.score(params, pool_x)[1]
 
     def score_host(self, params, pool_x) -> Tuple[ScoreStats, np.ndarray]:
         """:meth:`score` fetched to host numpy (the task-facade boundary)."""

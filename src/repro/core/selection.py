@@ -77,6 +77,8 @@ def k_center_greedy(features: np.ndarray, k: int,
     X = np.asarray(features, np.float32)
     N = X.shape[0]
     k = min(k, N)
+    if k <= 0:  # same contract as the device twin: nothing selected
+        return np.zeros((0,), np.int64)
     min_d = np.full((N,), np.inf, np.float32)
 
     def update(center_vec):

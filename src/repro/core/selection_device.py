@@ -1,0 +1,199 @@
+"""Device-resident greedy k-center (farthest-point) M(.) engine.
+
+The host oracle ``selection.k_center_greedy`` walks the pool with a python
+loop — one numpy sweep over all N rows per selected center, O(k * N * d)
+with a host round-trip per center.  At paper pool sizes (ImageNet: 1.3M
+rows) that loop is the last per-iteration MCAL hot path off-device.  This
+module runs the same greedy recursion as ONE jit-compiled program:
+
+* the pool is padded into ``(n_blocks, block, d)`` with the same
+  power-of-two bucketing as the scoring engine's ``_pack``, so a shrinking
+  candidate set re-uses O(log N) compiled programs across MCAL iterations
+  (k is bucketed to the next power of two as well — greedy selection is
+  prefix-stable, so computing a few extra centers and trimming to k
+  changes nothing);
+* a ``lax.fori_loop`` carries ``(min_d, chosen)``: per step one argmax
+  over the running min-distances picks the farthest point, then the
+  min-distances are updated from tiled distance blocks — the expansion
+  ``||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2``, so no (N, d) difference
+  tensor is ever materialized and the inner product rides the MXU.  A
+  pool that fits one row tile (``KCenterConfig.block``) sweeps as a
+  single fused matvec; larger pools go tile-by-tile via ``lax.map`` so
+  peak temporaries stay O(block) at ImageNet pool sizes;
+* anchor initialization (features of already-labeled samples) is a real
+  (N, M) tiled distance-matrix workload and routes through the
+  ``kernels.ops.pairwise_sqdist`` gate — the Pallas ``pairwise_dist``
+  kernel when the backend probe enables kernels, interpret mode on
+  non-TPU hosts, the repo-wide convention.  The per-center in-loop
+  update is a matvec — XLA already saturates it, so it stays on the jnp
+  expansion.
+
+Oracle-test contract (tests/test_selection_device.py)
+-----------------------------------------------------
+
+The engine must return the EXACT chosen-index sequence of the host oracle
+— not approximately, not as a set-overlap score — across seeded grids of
+(N, d, k, anchors, duplicate rows).  Two details make that a sound,
+testable contract rather than a float-rounding lottery:
+
+* tie-breaking is pinned: both engines take the FIRST index attaining the
+  max min-distance (``argmax`` first-occurrence, numpy and XLA agree), so
+  duplicate rows / equidistant points resolve identically;
+* the test grids use integer-valued float32 features small enough that
+  every squared distance is exactly representable, so the host's direct
+  ``sum((x - c)^2)`` and the device's MXU expansion produce bit-equal
+  distances and the argmax walks are identical.  On arbitrary real-valued
+  features the two paths can round differently near exact ties; MCAL's
+  acquisition is indifferent to which of two equidistant points it buys,
+  but the *test* harness pins the stronger exact contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import next_pow2 as _next_pow2
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class KCenterConfig:
+    block: int = 65536             # row tile for min-distance updates
+    use_kernel: Optional[bool] = None   # None -> backend probe (ops.use_pallas)
+
+
+def _make_dist_sweep(X: jax.Array, block: int):
+    """Build the per-center distance sweep ``dist(c) -> (Np,)`` over the
+    padded pool, with row sqnorms hoisted out of the greedy loop.
+
+    A pool that fits one row tile runs as a single fused matvec (the fast
+    path — sequential ``lax.map`` tiles and the reshape round-trip both
+    measurably slow a CPU host); larger pools sweep tile-by-tile so peak
+    temporaries stay O(block) regardless of N (the ImageNet-scale
+    regime)."""
+    Np, d = X.shape
+    if Np <= block:
+        x2 = jnp.sum(X * X, axis=-1)
+
+        def dist(c):
+            return jnp.maximum(x2 - 2.0 * (X @ c) + jnp.dot(c, c), 0.0)
+
+        return dist
+
+    Xb = X.reshape(Np // block, block, d)
+    x2b = jnp.sum(Xb * Xb, axis=-1)
+
+    def dist(c):
+        c2 = jnp.dot(c, c)
+
+        def blk(args):
+            xb, x2 = args
+            return jnp.maximum(x2 - 2.0 * (xb @ c) + c2, 0.0)
+
+        return jax.lax.map(blk, (Xb, x2b)).reshape(-1)
+
+    return dist
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block", "has_anchors"))
+def _kcenter_padded(X, n, mind0, *, k: int, block: int, has_anchors: bool):
+    """X: (Np, d) padded pool; n: true row count; mind0: (Np,) initial
+    min-distances (+inf rows, or min-over-anchors when ``has_anchors``).
+    Returns the (k,) chosen row indices, host-oracle-identical."""
+    Np, d = X.shape
+    dist = _make_dist_sweep(X, block)
+    valid = jnp.arange(Np) < n
+    min_d = jnp.where(valid, mind0, -jnp.inf)
+
+    first = jnp.argmax(min_d) if has_anchors else jnp.int32(0)
+    chosen = jnp.zeros((k,), jnp.int32).at[0].set(first)
+    min_d = jnp.minimum(
+        min_d, jnp.where(valid, dist(X[first]), -jnp.inf))
+
+    def body(i, carry):
+        min_d, chosen = carry
+        j = jnp.argmax(min_d)
+        chosen = chosen.at[i].set(j)
+        return (jnp.minimum(min_d, jnp.where(valid, dist(X[j]), -jnp.inf)),
+                chosen)
+
+    min_d, chosen = jax.lax.fori_loop(1, k, body, (min_d, chosen))
+    return chosen
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel"))
+def _anchor_min_dist(X, A, m, *, block: int, use_kernel: bool):
+    """(Np,) min squared distance to the first ``m`` rows of the padded
+    anchor matrix ``A`` — the tiled (N, M) distance-matrix leg.
+
+    The column-min folds per row tile, so peak distance temporaries are
+    O(block * Ma) however large the pool.  Both branches go through the
+    ``ops.pairwise_sqdist`` gate (Pallas kernel — interpret mode off-TPU
+    — or the jnp reference) so the distance expansion exists in exactly
+    one place per path and cannot drift from the oracle contract."""
+    Ma = A.shape[0]
+    amask = jnp.arange(Ma) < m
+
+    def blk(xb):
+        d = ops.pairwise_sqdist(xb, A, force_pallas=use_kernel)
+        return jnp.min(jnp.where(amask[None, :], d, jnp.inf), axis=1)
+
+    Xb = X.reshape(-1, block, X.shape[1])
+    if Xb.shape[0] == 1:
+        return blk(Xb[0])
+    return jax.lax.map(blk, Xb).reshape(-1)
+
+
+def k_center_greedy_device(features, k: int, anchors=None,
+                           cfg: KCenterConfig = KCenterConfig()) -> np.ndarray:
+    """Drop-in device twin of ``selection.k_center_greedy``.
+
+    ``features``: (N, d) array (host numpy or device-resident — e.g. the
+    scoring engine's feature emission, which never leaves the device);
+    ``anchors``: (M, d) features of already-selected/labeled samples.
+    Returns (k,) row indices into ``features`` as host int64.
+    """
+    X = jnp.asarray(features, jnp.float32)
+    N, d = X.shape
+    k = int(min(k, N))
+    if k <= 0:
+        return np.zeros((0,), np.int64)
+
+    use_kernel = (ops.use_pallas() if cfg.use_kernel is None
+                  else cfg.use_kernel)
+
+    # pow2-bucketed padding, mirroring PoolScoringEngine._pack
+    if N >= cfg.block:
+        block = cfg.block
+        nb = _next_pow2(math.ceil(N / block))
+    else:
+        block = max(_next_pow2(N), 8)
+        nb = 1
+    Np = nb * block
+    if Np != N:
+        X = jnp.pad(X, ((0, Np - N), (0, 0)))
+
+    has_anchors = anchors is not None and len(anchors) > 0
+    if has_anchors:
+        A = jnp.asarray(anchors, jnp.float32)
+        m = A.shape[0]
+        Ma = max(_next_pow2(m), 8)
+        if Ma != m:
+            A = jnp.pad(A, ((0, Ma - m), (0, 0)))
+        mind0 = _anchor_min_dist(X, A, m, block=block,
+                                 use_kernel=use_kernel)
+    else:
+        mind0 = jnp.full((Np,), jnp.inf, jnp.float32)
+
+    chosen = _kcenter_padded(
+        X, N, mind0, k=min(_next_pow2(k), Np), block=block,
+        has_anchors=has_anchors)
+    return np.asarray(chosen[:k], np.int64)

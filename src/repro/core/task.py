@@ -149,6 +149,20 @@ class LiveTask:
                                   metric)
         return np.asarray(candidates, np.int64)[rows]
 
+    def kcenter_candidates(self, k: int, candidates: np.ndarray,
+                           anchors: Optional[np.ndarray] = None):
+        """M(.) k-center fast path: the scoring sweep emits device-resident
+        features and the greedy farthest-point loop runs on device too —
+        the only host transfers are the k chosen rows and their features
+        (returned so the caller can extend its anchor set).  The host
+        oracle ``selection.k_center_greedy`` remains the reference path."""
+        from repro.core.selection_device import k_center_greedy_device
+        feats = self._engine.pool_features(self._params,
+                                           self._pool(candidates))
+        rows = k_center_greedy_device(feats, k, anchors=anchors)
+        picked = np.asarray(candidates, np.int64)[rows]
+        return picked, np.asarray(feats[jnp.asarray(rows)], np.float32)
+
     def predict(self, idx: np.ndarray) -> np.ndarray:
         stats, _ = self._engine.score_host(self._params, self._pool(idx))
         return np.asarray(stats.top1, np.int64)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import margin_head as _mh
+from repro.kernels import pairwise_dist as _pd
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref as _ref
 from repro.models.layers import ScoreStats
@@ -46,6 +47,15 @@ def score_head(hidden: jax.Array, w_vocab: jax.Array, *,
     return ScoreStats(
         margin=m.reshape(lead), entropy=e.reshape(lead),
         max_logprob=mlp.reshape(lead), top1=t1.reshape(lead))
+
+
+def pairwise_sqdist(x: jax.Array, c: jax.Array, *,
+                    force_pallas: Optional[bool] = None) -> jax.Array:
+    """(N, D) x (M, D) -> (N, M) squared distances for k-center M(.)."""
+    on = use_pallas() if force_pallas is None else force_pallas
+    if on:
+        return _pd.pairwise_sqdist(x, c, interpret=_interpret())
+    return _ref.pairwise_sqdist_ref(x, c)
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -1,0 +1,77 @@
+"""Tiled pairwise squared-euclidean-distance Pallas kernel.
+
+The k-center M(.) engine (``repro.core.selection_device``) needs blocks of
+the (N, M) squared-distance matrix between pool features and center/anchor
+features: the full matrix never has to exist at once — greedy farthest-point
+only consumes a running column-min.  This kernel produces one (bn, bm) tile
+per grid step from a (bn, D) row tile and a (bm, D) center tile, both VMEM
+resident, via the expansion
+
+    ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2
+
+so the inner product rides the MXU ((bn, D) x (D, bm) per step) and HBM
+traffic stays O(N*D + M*D + N*M) instead of the O(N*M*D) a materialized
+difference tensor would cost.
+
+Padded center columns are masked to ``BIG`` (not 0).  Today the wrapper
+trims to the true (N, M) before returning, so no caller observes them —
+the mask exists for the planned in-kernel column-min epilogue (ROADMAP:
+fold the anchor min into the kernel), where a phantom zero distance in a
+padded column would corrupt the reduction.  Distances are clamped at 0 —
+the expansion can go epsilon-negative in float for x ~ c.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+
+def _kernel(x_ref, c_ref, out_ref, *, M: int, bm: int):
+    ci = pl.program_id(1)
+    x = x_ref[:].astype(jnp.float32)                       # (bn, D)
+    c = c_ref[:].astype(jnp.float32)                       # (bm, D)
+    x2 = jnp.sum(x * x, axis=-1)                           # (bn,)
+    c2 = jnp.sum(c * c, axis=-1)                           # (bm,)
+    g = jax.lax.dot_general(
+        x, c, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (bn, bm)
+    d = jnp.maximum(x2[:, None] - 2.0 * g + c2[None, :], 0.0)
+    col = ci * bm + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    out_ref[:] = jnp.where(col < M, d, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def pairwise_sqdist(x: jax.Array, c: jax.Array, *, bn: int = 256,
+                    bm: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (N, D) rows; c: (M, D) centers -> (N, M) squared distances, fp32.
+
+    N/M are padded up to tile multiples (padded rows/cols trimmed from the
+    result); D stays whole per tile like ``margin_head`` holds (bt, D).
+    """
+    N, D = x.shape
+    M, D2 = c.shape
+    assert D == D2, (x.shape, c.shape)
+    Np = -(-N // bn) * bn
+    Mp = -(-M // bm) * bm
+    if Np != N:
+        x = jnp.pad(x, ((0, Np - N), (0, 0)))
+    if Mp != M:
+        c = jnp.pad(c, ((0, Mp - M), (0, 0)))
+    grid = (Np // bn, Mp // bm)
+    out = pl.pallas_call(
+        functools.partial(_kernel, M=M, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
+        interpret=interpret,
+    )(x, c)
+    return out[:N, :M]

@@ -37,3 +37,16 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def ssd_scan_ref(xh, dt, A, Bm, Cm, *, chunk: int = 128):
     return ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+
+
+def pairwise_sqdist_ref(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(N, D) x (M, D) -> (N, M) squared euclidean distances, fp32.
+
+    Same expansion as the Pallas kernel (||x||^2 - 2 x.c + ||c||^2,
+    clamped at 0) so kernel and reference round identically."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1)
+    c2 = jnp.sum(c * c, axis=-1)
+    g = jnp.einsum("nd,md->nm", x, c, preferred_element_type=jnp.float32)
+    return jnp.maximum(x2[:, None] - 2.0 * g + c2[None, :], 0.0)

@@ -17,7 +17,17 @@ import argparse
 import json
 
 
-def main():
+# every selection-module metric plus the paper's random baseline
+# (supported by select_for_training but previously missing from the CLI).
+# A literal, not `selection.METRICS`: importing repro.core pulls in jax,
+# and the launcher must stay cheap until parsing succeeds (--help never
+# pays for it).  tests/test_label_launcher.py asserts the sets match, so
+# drift fails CI.
+METRIC_CHOICES = ("margin", "entropy", "least_confidence", "kcenter",
+                  "random")
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--live", action="store_true")
     ap.add_argument("--dataset", default="cifar10",
@@ -28,14 +38,16 @@ def main():
     ap.add_argument("--difficulty", type=float, default=0.3)
     ap.add_argument("--eps", type=float, default=0.05)
     ap.add_argument("--budget", type=float, default=None)
-    ap.add_argument("--metric", default="margin",
-                    choices=("margin", "entropy", "least_confidence",
-                             "kcenter"))
+    ap.add_argument("--metric", default="margin", choices=METRIC_CHOICES)
     ap.add_argument("--service", default="amazon",
                     choices=("amazon", "satyam"))
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     from repro.core import (MCALConfig, SERVICES, LiveTask, run_mcal,
                             make_emulated_task)

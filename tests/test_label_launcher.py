@@ -1,0 +1,32 @@
+"""Launcher-level smoke tests for the labeling campaign CLI.
+
+The paper benchmarks every M(.) metric including the random baseline;
+the launcher must accept exactly the selection module's metric set plus
+``random`` (previously missing from the argparse choices).
+"""
+import pytest
+
+from repro.core import selection
+from repro.launch.label import METRIC_CHOICES, build_parser
+
+
+def test_metric_choices_cover_selection_metrics_plus_random():
+    assert set(METRIC_CHOICES) == set(selection.METRICS) | {"random"}
+
+
+@pytest.mark.parametrize("metric", sorted(set(selection.METRICS) |
+                                          {"random"}))
+def test_launcher_accepts_every_metric(metric):
+    args = build_parser().parse_args(["--metric", metric])
+    assert args.metric == metric
+
+
+def test_launcher_rejects_unknown_metric():
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["--metric", "bogus"])
+
+
+def test_launcher_defaults():
+    args = build_parser().parse_args([])
+    assert args.metric == "margin" and args.service == "amazon"
+    assert not args.live and args.budget is None

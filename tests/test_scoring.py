@@ -88,6 +88,48 @@ def test_rank_confident_matches_host_ranking(mlp_setup):
     np.testing.assert_array_equal(order, host_order)
 
 
+@pytest.mark.parametrize("mode", ["dense", "chunked"])
+@pytest.mark.parametrize("n", [512, 1000, 1537])
+def test_feature_emission_matches_reference(mlp_setup, mode, n):
+    """Features from the engine sweep match the host-forward reference to
+    1e-5 across head modes, including a non-divisible microbatch tail
+    (512 divides evenly; 1000 and 1537 leave ragged tails)."""
+    model, params, x, (_, ref_feats) = mlp_setup
+    eng = scoring.PoolScoringEngine(
+        model, scoring.ScoringConfig(microbatch=512, head_mode=mode,
+                                     vocab_chunk=8))
+    feats = eng.pool_features(params, x[:n])
+    assert isinstance(feats, jax.Array)   # device-resident, no host trip
+    assert feats.shape == (n, ref_feats.shape[1])
+    np.testing.assert_allclose(np.asarray(feats), ref_feats[:n], atol=1e-5)
+
+
+def test_feature_emission_consistent_with_score(mlp_setup):
+    """pool_features and score emit the same features from the same
+    compiled sweep."""
+    model, params, x, _ = mlp_setup
+    eng = scoring.PoolScoringEngine(
+        model, scoring.ScoringConfig(microbatch=512))
+    _, feats_score = eng.score(params, x[:700])
+    feats_only = eng.pool_features(params, x[:700])
+    np.testing.assert_array_equal(np.asarray(feats_only),
+                                  np.asarray(feats_score))
+
+
+def test_with_features_disabled(mlp_setup):
+    """with_features=False: stats still match, the feature slot is
+    zero-width, and pool_features refuses loudly."""
+    model, params, x, (ref_stats, _) = mlp_setup
+    eng = scoring.PoolScoringEngine(
+        model, scoring.ScoringConfig(microbatch=512, with_features=False))
+    stats, feats = eng.score_host(params, x[:1000])
+    assert feats.shape == (1000, 0)
+    np.testing.assert_allclose(stats.margin, ref_stats.margin[:1000],
+                               atol=1e-5)
+    with pytest.raises(ValueError):
+        eng.pool_features(params, x[:1000])
+
+
 def test_stats_from_confidence_packing():
     conf = np.asarray([0.9, 0.1, 0.5])
     top1 = np.asarray([1, 2, 3])

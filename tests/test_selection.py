@@ -98,6 +98,79 @@ def test_kcenter_spreads():
     assert (rows[0] < 50) != (rows[1] < 50)
 
 
+def _brute_force_curve(stats, correct, thetas, metric="margin"):
+    """Per-theta recount from first principles: stable-sort the scores,
+    take the clamped top-m slice, count errors — no shared cumsum."""
+    scores = sel.uncertainty_scores(metric, stats)
+    order = np.argsort(scores, kind="stable")
+    wrong = (~np.asarray(correct, bool))[order]
+    n = len(wrong)
+    out = []
+    for th in thetas:
+        m = min(max(int(round(th * n)), 1), n)
+        out.append(float(np.mean(wrong[:m])))
+    return np.asarray(out, np.float64)
+
+
+# thetas exercising the clamp at both ends: 0 and tiny round to m=1,
+# 1.0 is exact, and >1.0 (plus rounding slop) must clamp to m=n.
+CLAMP_THETAS = (0.0, 1e-9, 0.007, 0.5, 1.0, 1.004, 1.37)
+
+
+def _curve_cases(n_cases=12, seed=7):
+    rng = np.random.default_rng(seed)
+    cases = []
+    for metric in sel.UNCERTAINTY_METRICS:
+        for n in (1, 7, 40, 400):
+            cases.append((int(rng.integers(0, 2 ** 31)), n, metric))
+    rng.shuffle(cases)
+    return cases[:n_cases] + [(0, 1, "margin"), (1, 400, "entropy")]
+
+
+@pytest.mark.parametrize("seed,n,metric", _curve_cases())
+def test_error_curve_matches_brute_force_recount(seed, n, metric):
+    """Property grid: the cumsum-based curve equals a per-theta recount,
+    for every metric, across the clamp-exercising theta set — including
+    quantized scores that force stable-sort tie handling."""
+    rng = np.random.default_rng(seed)
+    # quantized scores -> deliberate exact ties in the ranking
+    margin = np.round(rng.uniform(0, 3, n), 1)
+    entropy = np.round(rng.uniform(0, 2, n), 1)
+    maxlp = -np.round(rng.uniform(0.01, 3, n), 1)
+    stats = _stats(margin, entropy=entropy, maxlp=maxlp)
+    correct = rng.uniform(size=n) < 0.7
+    curve = sel.machine_label_error_curve(stats, correct, CLAMP_THETAS,
+                                          metric)
+    expect = _brute_force_curve(stats, correct, CLAMP_THETAS, metric)
+    np.testing.assert_allclose(curve, expect, rtol=0, atol=1e-12)
+
+
+def test_error_curve_theta_clamping():
+    """theta=0 / tiny clamp up to the single most-confident sample;
+    theta >= 1 (and >1 from rounding) clamp down to the full set."""
+    n = 10
+    margin = np.linspace(5, 0.5, n)       # row 0 most confident
+    correct = np.zeros(n, bool)
+    correct[0] = True                      # only the top-1 row is right
+    stats = _stats(margin)
+    curve = sel.machine_label_error_curve(
+        stats, correct, [0.0, 1e-9, 1.0, 1.7])
+    assert curve[0] == 0.0 and curve[1] == 0.0      # m clamped to 1
+    assert curve[2] == curve[3] == pytest.approx(0.9)  # m clamped to n
+
+
+def test_error_curve_stable_tie_ranking():
+    """Equal scores keep input order (stable sort): with all margins tied,
+    the top-theta slice is exactly the input prefix."""
+    n = 8
+    stats = _stats(np.full(n, 2.0))
+    order = sel.rank_for_machine_labeling(stats)
+    np.testing.assert_array_equal(order, np.arange(n))  # ties -> input order
+    correct = np.asarray([1, 1, 0, 1, 0, 0, 1, 0], bool)
+    curve = sel.machine_label_error_curve(stats, correct, [0.25, 0.5, 1.0])
+    np.testing.assert_allclose(curve, [0.0, 0.25, 0.5])
+
+
 def test_error_curve_monotone_under_perfect_ranking():
     """With margin perfectly anti-correlated with error, the top-theta
     error curve is non-decreasing in theta."""

@@ -1,0 +1,209 @@
+"""Oracle-grid harness: the device k-center engine vs the host oracle.
+
+The contract (documented in ``repro.core.selection_device``) is EXACT
+chosen-index agreement with ``selection.k_center_greedy`` — the same
+sequence, not a set-overlap score.  To make that sound rather than a
+float-rounding lottery, every grid case uses integer-valued float32
+features small enough that all squared distances are exactly representable
+in fp32, so the host's direct ``sum((x - c)^2)`` and the device's MXU
+expansion ``||x||^2 - 2 x.c + ||c||^2`` produce bit-equal distances and
+both argmax walks (first-occurrence tie-break) are identical — including
+through duplicate-row ties and anchor-seeded starts.
+
+The grid sweeps (N, d, k, n_anchors, n_duplicates) plus block sizes that
+force both the fused single-tile sweep and the ``lax.map`` multi-tile
+sweep, the pow2-bucketed k padding, and the Pallas pairwise-distance
+kernel path (interpret mode, the repo's off-TPU convention).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import selection as sel
+from repro.core.selection_device import (KCenterConfig,
+                                         k_center_greedy_device)
+from repro.kernels import ops, ref
+from repro.kernels.pairwise_dist import pairwise_sqdist
+
+
+def _case(seed, N, d, k, n_anchors, n_dups):
+    """Integer-valued fp32 features (exact distances), optional duplicate
+    rows and anchors, all from one seeded generator."""
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 8, size=(N, d)).astype(np.float32)
+    if n_dups:
+        src = rng.integers(0, N, size=n_dups)
+        dst = rng.integers(0, N, size=n_dups)
+        X[dst] = X[src]
+    A = (rng.integers(0, 8, size=(n_anchors, d)).astype(np.float32)
+         if n_anchors else None)
+    return X, A
+
+
+GRID = [
+    # (seed, N, d, k, n_anchors, n_dups)
+    (0, 5, 3, 1, 0, 0),
+    (1, 5, 3, 5, 0, 3),          # k == N with duplicate rows
+    (2, 33, 4, 7, 0, 0),
+    (3, 33, 4, 7, 5, 0),         # anchor-seeded start
+    (4, 64, 8, 16, 0, 32),       # heavy duplication
+    (5, 100, 16, 13, 9, 20),
+    (6, 257, 8, 31, 3, 50),      # non-pow2 everything
+    (7, 1025, 32, 5, 17, 100),
+    (8, 2048, 64, 33, 1, 0),     # single anchor
+    (9, 300, 2, 40, 8, 150),     # low-d, mostly duplicates
+]
+
+
+@pytest.mark.parametrize("seed,N,d,k,n_anchors,n_dups", GRID)
+def test_exact_agreement_with_host_oracle(seed, N, d, k, n_anchors, n_dups):
+    X, A = _case(seed, N, d, k, n_anchors, n_dups)
+    host = sel.k_center_greedy(X, k, anchors=A)
+    dev = k_center_greedy_device(X, k, anchors=A)
+    np.testing.assert_array_equal(dev, host)
+
+
+@pytest.mark.parametrize("block", [16, 64, 1024])
+def test_multi_tile_sweep_matches_oracle(block):
+    """Small block sizes force the lax.map tiled sweep (and tiled anchor
+    init); the chosen sequence must not depend on the tiling."""
+    X, A = _case(11, 517, 8, 23, 6, 40)
+    host = sel.k_center_greedy(X, 23, anchors=A)
+    dev = k_center_greedy_device(X, 23, anchors=A,
+                                 cfg=KCenterConfig(block=block))
+    np.testing.assert_array_equal(dev, host)
+
+
+def test_k_bucketing_is_prefix_stable():
+    """k is padded to the next pow2 and trimmed — greedy selection is
+    prefix-stable, so every k must return a prefix of the k=N run."""
+    X, _ = _case(12, 120, 6, 0, 0, 10)
+    full = k_center_greedy_device(X, 120)
+    for k in (1, 3, 5, 17, 64, 100):
+        np.testing.assert_array_equal(k_center_greedy_device(X, k),
+                                      full[:k])
+
+
+def test_all_duplicate_pool_tie_breaking():
+    """Every row identical: both engines must walk the same (degenerate)
+    first-index tie-break sequence."""
+    X = np.tile(np.asarray([[3.0, 1.0, 2.0]], np.float32), (17, 1))
+    host = sel.k_center_greedy(X, 6)
+    dev = k_center_greedy_device(X, 6)
+    np.testing.assert_array_equal(dev, host)
+
+
+def test_two_point_tie_prefers_first_index():
+    """Two equidistant farthest points: the lower index must win on both
+    engines (argmax first-occurrence)."""
+    X = np.asarray([[0.0, 0.0], [4.0, 0.0], [0.0, 4.0], [1.0, 1.0]],
+                   np.float32)
+    host = sel.k_center_greedy(X, 3)
+    dev = k_center_greedy_device(X, 3)
+    np.testing.assert_array_equal(dev, host)
+    assert dev[0] == 0 and dev[1] == 1  # row 1 ties row 2, lower index wins
+
+
+def test_anchors_suppress_covered_region():
+    """With an anchor sitting on cluster A, the first device pick must come
+    from cluster B — and still match the host oracle exactly."""
+    rng = np.random.default_rng(13)
+    a = rng.integers(0, 3, size=(40, 4)).astype(np.float32)
+    b = rng.integers(20, 23, size=(40, 4)).astype(np.float32)
+    X = np.concatenate([a, b])
+    anchor = a[:1]
+    host = sel.k_center_greedy(X, 4, anchors=anchor)
+    dev = k_center_greedy_device(X, 4, anchors=anchor)
+    np.testing.assert_array_equal(dev, host)
+    assert dev[0] >= 40  # farthest from the anchored cluster
+
+
+def test_k_clamped_and_empty():
+    X, _ = _case(14, 9, 3, 0, 0, 0)
+    assert k_center_greedy_device(X, 0).shape == (0,)
+    assert sel.k_center_greedy(X, 0).shape == (0,)  # host twin agrees
+    np.testing.assert_array_equal(k_center_greedy_device(X, 50),
+                                  sel.k_center_greedy(X, 50))  # k > N clamps
+
+
+def test_accepts_device_resident_features():
+    """The engine consumes the scoring sweep's device arrays directly."""
+    X, A = _case(15, 130, 8, 9, 4, 0)
+    host = sel.k_center_greedy(X, 9, anchors=A)
+    dev = k_center_greedy_device(jnp.asarray(X), 9, anchors=A)
+    np.testing.assert_array_equal(dev, host)
+
+
+# -- the Pallas pairwise-distance kernel path --------------------------------
+
+
+@pytest.mark.parametrize("N,M,D", [(5, 3, 4), (64, 16, 8), (130, 9, 33),
+                                   (257, 128, 16)])
+def test_pairwise_kernel_matches_reference(N, M, D):
+    rng = np.random.default_rng(N * 1000 + M)
+    x = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(M, D)).astype(np.float32))
+    kern = pairwise_sqdist(x, c, bn=32, bm=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(kern),
+                               np.asarray(ref.pairwise_sqdist_ref(x, c)),
+                               atol=1e-5)
+    assert kern.shape == (N, M) and np.all(np.asarray(kern) >= 0.0)
+
+
+def test_pairwise_ops_wrapper_gates_kernel():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(7, 8)).astype(np.float32))
+    on = ops.pairwise_sqdist(x, c, force_pallas=True)
+    off = ops.pairwise_sqdist(x, c, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off), atol=1e-5)
+
+
+@pytest.mark.parametrize("seed,N,d,k,n_anchors,n_dups",
+                         [(3, 33, 4, 7, 5, 0), (5, 100, 16, 13, 9, 20),
+                          (6, 257, 8, 31, 3, 50)])
+def test_kernel_anchor_path_matches_oracle(seed, N, d, k, n_anchors,
+                                           n_dups):
+    """Anchor initialization through the Pallas kernel (interpret mode)
+    must preserve the exact-agreement contract."""
+    X, A = _case(seed, N, d, k, n_anchors, n_dups)
+    host = sel.k_center_greedy(X, k, anchors=A)
+    dev = k_center_greedy_device(
+        X, k, anchors=A, cfg=KCenterConfig(use_kernel=True))
+    np.testing.assert_array_equal(dev, host)
+
+
+# -- wiring: LiveTask + MCAL campaign take the device path -------------------
+
+
+def test_live_task_kcenter_campaign_uses_device_path(monkeypatch):
+    """A kcenter MCAL campaign over an engine-backed LiveTask routes M(.)
+    through kcenter_candidates (device features + device greedy loop),
+    accumulates anchors across iterations, and completes."""
+    from repro.core import LiveTask, MCALCampaign, MCALConfig
+    from repro.core.cost import AMAZON
+    from repro.data.synth import make_classification
+
+    x, y = make_classification(400, num_classes=4, dim=8, difficulty=0.3,
+                               seed=3)
+    task = LiveTask(features=x, groundtruth=y, num_classes=4, epochs=4,
+                    seed=3)
+    calls = []
+    orig = LiveTask.kcenter_candidates
+    monkeypatch.setattr(
+        LiveTask, "kcenter_candidates",
+        lambda self, k, cand, anchors=None: calls.append(len(cand)) or
+        orig(self, k, cand, anchors=anchors))
+    camp = MCALCampaign(task, AMAZON,
+                        MCALConfig(metric="kcenter", seed=3,
+                                   delta0_frac=0.02, max_iters=3))
+    camp.bootstrap()
+    n0 = len(camp.pool.B_idx)
+    camp.iteration()
+    camp.iteration()
+    assert len(calls) >= 2          # device path taken each acquisition
+    assert camp._anchor_feats is not None
+    assert camp._anchor_feats.shape[1] == task.hidden
+    # the anchor set grows by exactly the bought kcenter picks
+    assert len(camp._anchor_feats) == len(camp.pool.B_idx) - n0 > 0
