@@ -1,0 +1,173 @@
+"""Streaming pool-sweep runtime vs the non-overlapped per-batch loop.
+
+MCAL's commit step is one L(.) pass over the whole remaining pool:
+rank most-confident-first + take the top1 machine labels.  Three
+implementations of that deliverable at a 200k-row pool:
+
+  sweep_hostloop   the non-overlapped per-batch loop the seed shipped
+                   (``score_pool_reference``: chunked forward, one
+                   host-blocking round-trip per batch, numpy statistics)
+                   + host ranking — the oracle baseline, and the leg the
+                   CI gate measures the runtime against;
+  sweep_blocking   the same jit-compiled engine step swept page-by-page
+                   but host-SYNCED each page (full ScoreStats + feature
+                   materialization per page, the pre-sweep
+                   ``task.score``-per-chunk pattern) — isolates what
+                   double-buffering + sink folding buy over a loop that
+                   is already jit-backed;
+  sweep_runner     ``PoolSweepRunner`` + ``RankTop1Sink``: paged,
+                   double-buffered, sink-folded — one score field + top1
+                   per row is all that reaches the host.
+
+The runner must agree with sweep_blocking EXACTLY (identical page
+packing -> bit-equal per-row statistics -> identical stable rank) and
+with the seed loop to fp tolerance; ``--enforce`` (the CI gate) asserts
+the runner is >= 2x faster than the non-overlapped per-batch loop.
+
+A top-k M(.) acquisition row rides along: the device top-k reservoir
+sweep vs the same host loop + argpartition.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed_best
+from repro.core import selection as sel
+from repro.core.scoring import (PoolScoringEngine, ScoringConfig,
+                                score_pool_reference)
+
+
+def _setup(pool: int, dim: int, classes: int):
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models.registry import get_model
+
+    cfg = ModelConfig(name="bench-sweep", family="mlp", num_layers=2,
+                      d_model=64, num_classes=classes, input_dim=dim,
+                      dtype="float32", remat="none")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    x = np.random.default_rng(0).normal(size=(pool, dim)).astype(np.float32)
+    return model, params, x
+
+
+def _hostloop_rank(model, params, x, chunk: int = 2048):
+    """The seed's non-overlapped per-batch loop, producing the commit
+    deliverable: (order most-confident-first, top1 labels)."""
+    stats, _ = score_pool_reference(model, params, x, chunk=chunk)
+    return (sel.rank_for_machine_labeling(stats, "margin"),
+            np.asarray(stats.top1, np.int64))
+
+
+def _blocking_rank(engine, params, x, page: int):
+    """The jit-engine swept page-by-page with a host sync + full stats and
+    feature materialization per page (the pre-sweep per-chunk pattern)."""
+    fields, top1 = [], []
+    n = x.shape[0]
+    for lo in range(0, n, page):
+        stats, _feats = engine.score_host(params, x[lo:lo + page])
+        fields.append(stats.margin)
+        top1.append(np.asarray(stats.top1, np.int64))
+    scores = -np.concatenate(fields).astype(np.float64)
+    return np.argsort(scores, kind="stable"), np.concatenate(top1)
+
+
+def run_sweep(pool: int = 200_000, dim: int = 32, classes: int = 10,
+              microbatch: int = 2048, page: int = 16_384,
+              enforce: bool = False) -> list:
+    from repro.serving.sweep import (EngineSweepAdapter, PoolSweepRunner,
+                                     RankTop1Sink, SweepConfig, TopKSink)
+
+    model, params, x = _setup(pool, dim, classes)
+    engine = PoolScoringEngine(model, ScoringConfig(microbatch=microbatch))
+    runner = PoolSweepRunner(EngineSweepAdapter(engine),
+                             SweepConfig(page_rows=page))
+
+    # warm every leg (incl. each one's ragged-tail program)
+    tail = pool % page or page
+    runner.run(params, x[:page + tail], RankTop1Sink("margin"))
+    _blocking_rank(engine, params, x[:page + tail], page)
+    ref_tail = pool % 2048 or 2048
+    score_pool_reference(model, params, x[:2048 + ref_tail])
+
+    (order_host, top1_host), us_host = timed_best(
+        _hostloop_rank, model, params, x, repeat=2)
+    (order_blk, top1_blk), us_blk = timed_best(
+        _blocking_rank, engine, params, x, page, repeat=3)
+
+    def _runner_rank():
+        return runner.run(params, x, RankTop1Sink("margin"))
+
+    (order_run, top1_run), us_run = timed_best(_runner_rank, repeat=3)
+
+    # identical page packing -> bit-equal statistics -> identical rank
+    assert np.array_equal(order_run, order_blk), \
+        "sweep runner diverged from the blocking page loop"
+    assert np.array_equal(top1_run, top1_blk)
+    # agreement with the seed per-batch loop (different einsum contraction
+    # -> fp tolerance: allow measure-zero argmax flips on near-tied logits)
+    assert np.mean(top1_run == top1_host) > 0.999, \
+        "sweep runner top1 diverged from the seed host loop"
+
+    speedup_host = us_host / us_run
+    speedup_blk = us_blk / us_run
+    rows = [
+        Row(f"sweep_hostloop_{pool}", us_host,
+            f"{pool / (us_host / 1e6):.0f}rows/s"),
+        Row(f"sweep_blocking_{pool}", us_blk,
+            f"{pool / (us_blk / 1e6):.0f}rows/s"),
+        Row(f"sweep_runner_{pool}", us_run,
+            f"{pool / (us_run / 1e6):.0f}rows/s;"
+            f"speedup={speedup_host:.1f}x_vs_hostloop,"
+            f"{speedup_blk:.2f}x_vs_blocking"),
+    ]
+
+    # M(.) acquisition leg: device top-k reservoir vs host loop + argpartition
+    k = 1024
+
+    def _host_topk():
+        stats, _ = score_pool_reference(model, params, x)
+        scores = sel.uncertainty_scores("margin", stats)
+        return np.argpartition(-scores, k - 1)[:k]
+
+    host_top, us_htop = timed_best(_host_topk, repeat=2)
+    dev_top, us_dtop = timed_best(
+        lambda: runner.run(params, x, TopKSink(k, "margin")), repeat=3)
+    overlap = len(set(dev_top.tolist()) & set(host_top.tolist()))
+    assert overlap >= 0.999 * k, \
+        "device top-k reservoir disagrees with the host selection"
+    rows.append(Row(f"sweep_topk_{pool}_k{k}", us_dtop,
+                    f"speedup={us_htop / us_dtop:.1f}x_vs_hostloop"))
+
+    if enforce:
+        assert speedup_host >= 2.0, \
+            f"sweep runner only {speedup_host:.2f}x over the " \
+            f"non-overlapped per-batch loop"
+    return rows
+
+
+def run_smoke() -> list:
+    """CI smoke shape: same legs, same >= 2x gate, 20k-row pool."""
+    return run_sweep(pool=20_000, page=4096, enforce=True)
+
+
+def run() -> list:
+    """Full bench: the 200k-row pool with the >= 2x gate enforced (the
+    acceptance shape)."""
+    return run_sweep(enforce=True)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", type=int, default=200_000)
+    ap.add_argument("--page", type=int, default=16_384)
+    ap.add_argument("--enforce", action="store_true",
+                    help="assert the >= 2x speedup floor (the CI gate)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-shape smoke mode (gate enforced)")
+    args = ap.parse_args()
+    rows = (run_smoke() if args.smoke else
+            run_sweep(pool=args.pool, page=args.page, enforce=args.enforce))
+    for r in rows:
+        print(r.csv())

@@ -12,9 +12,13 @@
   bench_table3             Tbl. 3 (eps = 10%)
   bench_imagenet_bailout   §5.1 ImageNet
   bench_kernels            margin_head scoring structure
+  bench_sweep              streaming pool-sweep runtime (>= 2x gate)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
+CI smoke: PYTHONPATH=src python -m benchmarks.run --smoke
+          (small-shape sweep + scoring + k-center engine legs, speedup
+          gates enforced — the CI matrix runs this on both jax legs)
 """
 from __future__ import annotations
 
@@ -35,13 +39,44 @@ MODULES = (
     "bench_table3",
     "bench_imagenet_bailout",
     "bench_kernels",
+    "bench_sweep",
 )
+
+
+def run_smoke() -> int:
+    """The CI smoke leg: small-shape sweep-runtime + engine benchmarks
+    with their speedup gates ENFORCED (a gate miss fails the job)."""
+    from benchmarks import bench_selection, bench_sweep
+
+    print("name,us_per_call,derived")
+    status = 0
+    for name, fn in (
+        ("bench_sweep[smoke]", bench_sweep.run_smoke),
+        ("bench_selection[scoring]",
+         lambda: bench_selection.run_scoring(enforce=True)),
+        ("bench_selection[kcenter]",
+         lambda: bench_selection.run_kcenter(enforce=True)),
+    ):
+        try:
+            for row in fn():
+                print(row.csv(), flush=True)
+        except Exception as e:
+            status = 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
+    return status
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: sweep + scoring + k-center engine legs "
+                         "at small shapes, speedup gates enforced")
     args = ap.parse_args()
+
+    if args.smoke:
+        sys.exit(run_smoke())
 
     print("name,us_per_call,derived")
     failed = []

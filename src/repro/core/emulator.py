@@ -46,6 +46,7 @@ class EmulatedTask:
     arch_name: str = "emulated"
     seed: int = 0
     min_train: int = 8
+    sweep_page: int = 65536       # pool-sweep page rows (L(.)/commit pass)
 
     def __post_init__(self):
         root = np.random.default_rng(self.seed)
@@ -87,6 +88,19 @@ class EmulatedTask:
                                       self.predict(idx))
         feats = np.stack([conf, self.u[idx]], axis=1)
         return stats, feats
+
+    def machine_label_sweep(self, idx: np.ndarray, metric: str = "margin"):
+        """L(.)/commit pass through the same paged sweep runtime the live
+        path uses (host adapter, ``sweep_page`` rows per page), so paper-
+        scale replays exercise the cursor/sink machinery without a device
+        in the loop.  Per-sample draws are deterministic per global index,
+        so the paged fold is exactly the full-pool ranking."""
+        from repro.serving.sweep import (HostTaskAdapter, PoolSweepRunner,
+                                         RankTop1Sink, SweepConfig)
+        runner = PoolSweepRunner(HostTaskAdapter(self.score),
+                                 SweepConfig(page_rows=self.sweep_page))
+        return runner.run(None, np.asarray(idx, np.int64),
+                          RankTop1Sink(metric))
 
     def kcenter_candidates(self, k: int, candidates: np.ndarray,
                            anchors: Optional[np.ndarray] = None):
@@ -160,10 +174,12 @@ CALIBRATIONS: Dict[Tuple[str, str], Tuple[float, float, float, float, float]] = 
 
 def make_emulated_task(dataset: str, arch: str, *, seed: int = 0,
                        pool_size: Optional[int] = None,
-                       rank_noise: float = 0.02) -> EmulatedTask:
+                       rank_noise: float = 0.02,
+                       sweep_page: int = 65536) -> EmulatedTask:
     d = DATASETS[dataset]
     alpha, gamma, k, q, c_u = CALIBRATIONS[(dataset, arch)]
     return EmulatedTask(
         pool_size=pool_size or d["pool"], num_classes=d["classes"],
         law=PowerLaw(alpha=alpha, gamma=gamma, k=k), q=q, c_u=c_u,
-        rank_noise=rank_noise, arch_name=arch, seed=seed)
+        rank_noise=rank_noise, arch_name=arch, seed=seed,
+        sweep_page=sweep_page)

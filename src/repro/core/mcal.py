@@ -60,6 +60,8 @@ class MCALConfig:
     seed: int = 0
     keep_surface: bool = False
     budget: Optional[float] = None  # set -> budget-constrained variant
+    sweep_async: bool = False       # overlap the M(.) sweep with the
+                                    # host-side fits + joint search
 
 
 @dataclasses.dataclass
@@ -146,7 +148,11 @@ class MCALCampaign:
         self.decision = "hybrid"
         self.B_opt = 0
         self.theta_opt = 0.0
+        # k-center anchor cache: features of B under the CURRENT classifier
+        # (invalidated every retrain, rebuilt from B_idx on demand/resume)
         self._anchor_feats: Optional[np.ndarray] = None
+        # in-flight async M(.) sweep: (submitted_k, SweepFuture)
+        self._pending: Optional[Tuple[int, object]] = None
         self._iter = 0
 
     # -- bootstrap ----------------------------------------------------------
@@ -170,6 +176,7 @@ class MCALCampaign:
     # -- internals ----------------------------------------------------------
     def _train_and_measure(self):
         p = self.pool
+        self._anchor_feats = None   # the representation moves every retrain
         c = self.task.train(p.B_idx, p.labels[p.B_idx])
         p.ledger.pay_training(c)
         self.own_training += c
@@ -212,6 +219,23 @@ class MCALCampaign:
         assert not self.done
         p = self.pool
         X = self.task.pool_size
+        # async overlap: launch this iteration's M(.) sweep (device) before
+        # the host-side power-law fits + joint search below; acquire()
+        # synchronizes at the fold.  The sweep is submitted at the current
+        # delta — prefix-stable rankings (top-k, greedy k-center) let
+        # acquire() trim to any smaller final take; a larger adapted delta
+        # falls back to a synchronous re-rank.
+        self._pending = None
+        if (acquire and forced_acquisition is None and self.cfg.sweep_async
+                and self.cfg.metric != "random"
+                and hasattr(self.task, "submit_candidates")):
+            cand = p.unlabeled_candidates()
+            k = min(self.delta, len(cand))
+            if k > 0:
+                anchors = (self._anchor_features()
+                           if self.cfg.metric == "kcenter" else None)
+                self._pending = (k, self.task.submit_candidates(
+                    self.cfg.metric, k, cand, anchors=anchors))
         res = self.search()
         self.B_opt, self.theta_opt = res.B_opt, res.theta_opt
 
@@ -241,6 +265,7 @@ class MCALCampaign:
                               len(p.B_idx) + self.delta))
             if p.ledger.total + float(next_spend) > self.cfg.budget:
                 self.done = True
+                self._drop_pending()
                 return rec
         else:
             # bail-out (paper §5.1 footnote): exploration tax exceeded while
@@ -253,6 +278,7 @@ class MCALCampaign:
                     p.ledger.training > self.cfg.bailout_frac * human_all:
                 self.done = True
                 self.decision = "human_all"
+                self._drop_pending()
                 return rec
 
         if self.stable and not self.freeze_delta:
@@ -274,10 +300,12 @@ class MCALCampaign:
         if enough and self.stable and res.feasible and \
                 res.B_opt <= len(p.B_idx) and not self.freeze_delta:
             self.done = True
+            self._drop_pending()
             return rec
 
         if self._iter >= self.cfg.max_iters:
             self.done = True
+            self._drop_pending()
             return rec
 
         if acquire:
@@ -285,75 +313,107 @@ class MCALCampaign:
         return rec
 
     def acquire(self, forced: Optional[np.ndarray] = None):
-        """Buy delta labels ranked by M(.), retrain, re-measure."""
+        """Buy delta labels ranked by M(.), retrain, re-measure.  If
+        ``iteration`` launched an async ranking sweep, synchronize here
+        (the fold) and trim its prefix-stable ranking to the final take."""
         p = self.pool
         cand = p.unlabeled_candidates()
+        pending, self._pending = self._pending, None
         if len(cand) == 0:
+            if pending is not None:
+                pending[1].cancel()
             self.done = True
             return
         if forced is not None:
+            if pending is not None:
+                pending[1].cancel()
             pick = np.asarray(forced, np.int64)
         else:
             take = min(self.delta, len(cand))
             if self.stable and self.B_opt > len(p.B_idx):
                 take = min(take, self.B_opt - len(p.B_idx))
-            pick = self._rank_candidates(take, cand)
+            pick = None
+            if pending is not None:
+                if take <= pending[0]:
+                    out = pending[1].result()
+                    full = out[0] if isinstance(out, tuple) else out
+                    pick = np.asarray(full[:take], np.int64)
+                else:   # adapted delta outgrew the submitted sweep
+                    pending[1].cancel()
+            if pick is None:   # no sweep in flight, or delta grew past it
+                pick = self._rank_candidates(take, cand)
         p.buy_labels(self.task, pick, self.service)
         p.in_B[pick] = True
         p.B_idx = np.concatenate([p.B_idx, pick])
         self._train_and_measure()
 
-    def _rank_candidates(self, k: int, cand: np.ndarray, *,
-                         commit_anchors: bool = True) -> np.ndarray:
-        """M(.): pick ``k`` of ``cand``.  Engine-backed tasks take device
-        fast paths — uncertainty metrics via device top-k (no pool-wide
-        stats transfer), k-center via the device greedy farthest-point
-        engine over device-resident features (``core.selection_device``);
-        random and tasks without an engine fall back to the host reference
-        path.  ``commit_anchors=False`` leaves the k-center anchor state
-        untouched (proposal-only ranking)."""
+    def _drop_pending(self):
+        """Cancel (best-effort) and forget an in-flight async M(.) sweep —
+        early loop exits must not leave a pool sweep burning the device."""
+        if self._pending is not None:
+            self._pending[1].cancel()
+            self._pending = None
+
+    def _anchor_features(self) -> Optional[np.ndarray]:
+        """k-center anchor set: features of the human-labeled set B under
+        the CURRENT classifier (the covered set in the live representation
+        space).  Cached per training round — the representation moves
+        every retrain — and rebuilt from ``B_idx`` alone, so resumed
+        campaigns recover it with one feature sweep."""
+        p = self.pool
+        if len(p.B_idx) == 0:
+            return None
+        if self._anchor_feats is None:
+            if hasattr(self.task, "anchor_features"):
+                self._anchor_feats = self.task.anchor_features(p.B_idx)
+            else:
+                self._anchor_feats = np.asarray(
+                    self.task.score(p.B_idx)[1], np.float32)
+        return self._anchor_feats
+
+    def _rank_candidates(self, k: int, cand: np.ndarray) -> np.ndarray:
+        """M(.): pick ``k`` of ``cand``.  Engine-backed tasks take sweep
+        fast paths — uncertainty metrics via the paged device top-k sink
+        (no pool-wide stats transfer), k-center via the device greedy
+        farthest-point engine over sweep-emitted device features
+        (``core.selection_device``); random and tasks without an engine
+        fall back to the host reference path."""
+        if k <= 0:
+            return np.zeros((0,), np.int64)
         if self.cfg.metric in sel.UNCERTAINTY_METRICS and \
                 hasattr(self.task, "topk_candidates"):
             return self.task.topk_candidates(self.cfg.metric, k, cand)
         if self.cfg.metric == "kcenter" and \
                 hasattr(self.task, "kcenter_candidates"):
-            if k <= 0:
-                return np.zeros((0,), np.int64)
-            pick, new_anchors = self.task.kcenter_candidates(
-                k, cand, anchors=self._anchor_feats)
-            if commit_anchors:
-                self._anchor_feats = (
-                    new_anchors if self._anchor_feats is None
-                    else np.concatenate([self._anchor_feats, new_anchors]))
+            pick, _ = self.task.kcenter_candidates(
+                k, cand, anchors=self._anchor_features())
             return pick
         stats = feats = None
         if self.cfg.metric in sel.UNCERTAINTY_METRICS or \
                 self.cfg.metric == "kcenter":
             stats, feats = self.task.score(cand)
-        pick = sel.select_for_training(
+        anchors = (self._anchor_features() if self.cfg.metric == "kcenter"
+                   else None)
+        return sel.select_for_training(
             self.cfg.metric, k, stats=stats, features=feats,
-            candidates=cand, anchors=self._anchor_feats, rng=self.rng)
-        if self.cfg.metric == "kcenter" and feats is not None \
-                and commit_anchors:
-            chosen_rows = {c: i for i, c in enumerate(cand)}
-            rows = [chosen_rows[c] for c in pick]
-            new_anchors = feats[rows]
-            self._anchor_feats = (
-                new_anchors if self._anchor_feats is None
-                else np.concatenate([self._anchor_feats, new_anchors]))
-        return pick
+            candidates=cand, anchors=anchors, rng=self.rng)
 
     def propose_acquisition(self, k: int) -> np.ndarray:
         """Rank candidates by this campaign's M(.) without committing."""
         cand = self.pool.unlabeled_candidates()
-        return self._rank_candidates(min(k, len(cand)), cand,
-                                     commit_anchors=False)
+        return self._rank_candidates(min(k, len(cand)), cand)
 
     def _machine_label(self, idx: np.ndarray):
         """L(.): one scoring sweep over ``idx`` -> (rows most-confident-
-        first, machine labels row-aligned with ``idx``).  The predicted
+        first, machine labels row-aligned with ``idx``).  Sweep-capable
+        tasks stream ``idx`` through the paged pool-sweep runtime (only
+        the rank field + top1 per row reach the host); the predicted
         labels come from the same sweep's top1, so committing a campaign
         costs a single pool pass."""
+        if hasattr(self.task, "machine_label_sweep"):
+            order, pred = self.task.machine_label_sweep(idx,
+                                                        self.cfg.l_metric)
+            return np.asarray(order, np.int64), np.asarray(pred, np.int64)
         stats, _ = self.task.score(idx)
         order = sel.rank_for_machine_labeling(stats, self.cfg.l_metric)
         return order, np.asarray(stats.top1, np.int64)
@@ -451,6 +511,14 @@ class MCALCampaign:
             "stable": self.stable,
             "own_training": self.own_training,
             "iter": self._iter,
+            # decision state: a campaign resumed after bail-out must still
+            # know it chose human_all (and an exploration-frozen campaign
+            # that it is frozen) — these were silently dropped before.
+            "done": bool(self.done),
+            "decision": self.decision,
+            "B_opt": int(self.B_opt),
+            "theta_opt": float(self.theta_opt),
+            "freeze_delta": bool(self.freeze_delta),
         }
 
     def load_state_dict(self, s: Dict):
@@ -475,8 +543,20 @@ class MCALCampaign:
         self.stable = bool(s["stable"])
         self.own_training = float(s["own_training"])
         self._iter = int(s["iter"])
+        # decision state (absent in pre-sweep checkpoints -> fresh defaults)
+        self.done = bool(s.get("done", False))
+        self.decision = str(s.get("decision", "hybrid"))
+        self.B_opt = int(s.get("B_opt", 0))
+        self.theta_opt = float(s.get("theta_opt", 0.0))
+        self.freeze_delta = bool(s.get("freeze_delta", False))
+        self._pending = None
         # retrain the classifier on the persisted label set
+        self._anchor_feats = None
         self.task.train(p.B_idx, p.labels[p.B_idx])
+        if self.cfg.metric == "kcenter":
+            # one feature sweep over B_idx rebuilds the k-center anchor
+            # state under the freshly retrained classifier
+            self._anchor_features()
 
 
 def run_mcal(task, service: LabelingService,

@@ -61,6 +61,20 @@ def next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+def pack_shape(n: int, microbatch: int) -> Tuple[int, int]:
+    """The engine's pow2 microbatch bucketing for an ``n``-row pool:
+    ``(n_mb, mb)`` with ``n_mb * mb >= n``.  Shared with the streaming
+    sweep runtime (``serving.sweep``) so pages pack identically to an
+    unpaged engine sweep and hit the same compile cache."""
+    if n >= microbatch:
+        mb = microbatch
+        n_mb = next_pow2(math.ceil(n / mb))
+    else:
+        mb = max(next_pow2(n), 8)
+        n_mb = 1
+    return n_mb, mb
+
+
 def resolve_head_weight(cfg, params) -> jax.Array:
     """The (D, V) scoring-head matrix for any model family: the explicit
     classifier head when present, otherwise the (possibly tied) LM head."""
@@ -208,12 +222,7 @@ class PoolScoringEngine:
         candidate set shrinks across iterations."""
         x = jnp.asarray(pool_x)
         n = x.shape[0]
-        if n >= self.cfg.microbatch:
-            mb = self.cfg.microbatch
-            n_mb = next_pow2(math.ceil(n / mb))
-        else:
-            mb = max(next_pow2(n), 8)
-            n_mb = 1
+        n_mb, mb = pack_shape(n, self.cfg.microbatch)
         pad = n_mb * mb - n
         if pad:
             x = jnp.concatenate(
@@ -225,6 +234,16 @@ class PoolScoringEngine:
         return x.reshape((n_mb, mb) + x.shape[1:]), n
 
     # -- public API --------------------------------------------------------
+
+    def score_pages(self, params, xs) -> Tuple[ScoreStats, jax.Array]:
+        """The jit-compiled packed scoring step over a pre-packed
+        ``(n_mb, mb, ...)`` page (see :func:`pack_shape`) — the sweep
+        runtime's page kernel (``serving.sweep.EngineSweepAdapter``).
+        Returns PACKED statistics/features (padding rows included; the
+        caller masks by its own valid count).  Shares the compile cache
+        with :meth:`score`, and donates the page buffer where the backend
+        supports donation."""
+        return self._score_all(params, xs)
 
     def score(self, params, pool_x) -> Tuple[ScoreStats, jax.Array]:
         """Score the whole pool.  Returns device-resident ScoreStats and

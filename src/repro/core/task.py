@@ -27,6 +27,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.selection import UNCERTAINTY_METRICS
+
 
 class LabelingTask(Protocol):
     pool_size: int
@@ -63,6 +65,7 @@ class LiveTask:
     measured_cost: bool = False      # False -> cost = c_u_nominal * |B| (deterministic)
     c_u_nominal: float = 1e-4        # $/sample-iteration when not measuring
     score_microbatch: int = 2048     # pool-scoring engine microbatch
+    sweep_page: int = 8192           # pool-sweep runtime page rows
 
     def __post_init__(self):
         from repro.configs.base import ModelConfig, TrainConfig
@@ -84,8 +87,13 @@ class LiveTask:
         self._params = None
         self._step_cache: Dict[int, object] = {}
         from repro.core.scoring import PoolScoringEngine, ScoringConfig
+        from repro.serving.sweep import (EngineSweepAdapter, PoolSweepRunner,
+                                         SweepConfig)
         self._engine = PoolScoringEngine(
             self.model, ScoringConfig(microbatch=self.score_microbatch))
+        self._sweep = PoolSweepRunner(
+            EngineSweepAdapter(self._engine),
+            SweepConfig(page_rows=self.sweep_page))
 
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:
@@ -129,8 +137,12 @@ class LiveTask:
         return self.c_u_nominal * n
 
     # -- scoring ----------------------------------------------------------
-    # The hot path (score / predict / top-k) runs through the device-
-    # resident PoolScoringEngine; the seed host loop survives as
+    # Pool-scale passes (top-k M(.), k-center features, the L(.)/commit
+    # rank) stream through the paged pool-sweep runtime
+    # (``serving.sweep.PoolSweepRunner`` over the device engine), so the
+    # pool never materializes on the device and only each sink's fold
+    # returns to the host.  Small measurement scoring (the test set) stays
+    # on the direct engine path; the seed host loop survives as
     # ``repro.core.scoring.score_pool_reference`` (the oracle the engine
     # is validated against and benchmarked over).
 
@@ -144,24 +156,64 @@ class LiveTask:
 
     def topk_candidates(self, metric: str, k: int,
                         candidates: np.ndarray) -> np.ndarray:
-        """M(.) fast path: device-side top-k over the candidate pool."""
-        rows = self._engine.top_k(self._params, self._pool(candidates), k,
-                                  metric)
+        """M(.) fast path: paged sweep folding a device top-k reservoir —
+        only the k chosen rows ever reach the host."""
+        from repro.serving.sweep import TopKSink
+        rows = self._sweep.run(self._params, self._pool(candidates),
+                               TopKSink(k, metric))
         return np.asarray(candidates, np.int64)[rows]
 
     def kcenter_candidates(self, k: int, candidates: np.ndarray,
                            anchors: Optional[np.ndarray] = None):
-        """M(.) k-center fast path: the scoring sweep emits device-resident
+        """M(.) k-center fast path: the paged sweep emits device-resident
         features and the greedy farthest-point loop runs on device too —
-        the only host transfers are the k chosen rows and their features
-        (returned so the caller can extend its anchor set).  The host
-        oracle ``selection.k_center_greedy`` remains the reference path."""
+        the only host transfers are the k chosen rows and their features.
+        The host oracle ``selection.k_center_greedy`` remains the
+        reference path."""
         from repro.core.selection_device import k_center_greedy_device
-        feats = self._engine.pool_features(self._params,
-                                           self._pool(candidates))
+        from repro.serving.sweep import FeatureSink
+        feats = self._sweep.run(self._params, self._pool(candidates),
+                                FeatureSink())
         rows = k_center_greedy_device(feats, k, anchors=anchors)
         picked = np.asarray(candidates, np.int64)[rows]
         return picked, np.asarray(feats[jnp.asarray(rows)], np.float32)
+
+    def anchor_features(self, idx: np.ndarray) -> np.ndarray:
+        """(len(idx), D) pooled features of ``idx`` under the CURRENT
+        classifier (one paged feature sweep) — the campaign's k-center
+        anchor set, rebuildable from ``B_idx`` alone on resume."""
+        from repro.serving.sweep import FeatureSink
+        return np.asarray(
+            self._sweep.run(self._params, self._pool(idx), FeatureSink()),
+            np.float32)
+
+    def machine_label_sweep(self, idx: np.ndarray, metric: str = "margin"):
+        """L(.)/commit fast path: one paged sweep over ``idx`` ->
+        (rows most-confident-first, machine labels row-aligned with
+        ``idx``).  Only the rank field + top1 per row return to host."""
+        from repro.serving.sweep import RankTop1Sink
+        order, top1 = self._sweep.run(self._params, self._pool(idx),
+                                      RankTop1Sink(metric))
+        return order, top1
+
+    def submit_candidates(self, metric: str, k: int, candidates: np.ndarray,
+                          anchors: Optional[np.ndarray] = None):
+        """Async M(.): launch the ranking sweep on the runner's worker
+        thread and return a ``SweepFuture`` — the campaign overlaps its
+        host-side fits/search and synchronizes at ``result()``.
+        Uncertainty metrics resolve to the picked pool indices; k-center
+        to the same ``(picked, features)`` pair as
+        :meth:`kcenter_candidates`."""
+        from repro.serving.sweep import TopKSink
+        cand = np.asarray(candidates, np.int64)
+        if metric in UNCERTAINTY_METRICS:
+            return self._sweep.submit(
+                self._params, self._pool(cand), TopKSink(k, metric),
+                map_result=lambda rows: cand[rows])
+        if metric == "kcenter":
+            return self._sweep.submit_call(self.kcenter_candidates, k, cand,
+                                           anchors)
+        raise ValueError(f"no async sweep for metric {metric!r}")
 
     def predict(self, idx: np.ndarray) -> np.ndarray:
         stats, _ = self._engine.score_host(self._params, self._pool(idx))

@@ -41,6 +41,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--metric", default="margin", choices=METRIC_CHOICES)
     ap.add_argument("--service", default="amazon",
                     choices=("amazon", "satyam"))
+    ap.add_argument("--sweep-page", type=int, default=8192,
+                    help="pool-sweep runtime page rows (the paged, "
+                         "double-buffered L(.)/M(.) pool passes)")
+    ap.add_argument("--sweep-async", action="store_true",
+                    help="overlap each iteration's M(.) sweep with the "
+                         "host-side power-law fits + joint search")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     return ap
@@ -55,15 +61,17 @@ def main():
 
     service = SERVICES[args.service]
     cfg = MCALConfig(eps_target=args.eps, metric=args.metric,
-                     budget=args.budget, seed=args.seed)
+                     budget=args.budget, seed=args.seed,
+                     sweep_async=args.sweep_async)
     if args.live:
         x, y = make_classification(args.pool, num_classes=args.classes,
                                    difficulty=args.difficulty,
                                    seed=args.seed)
         task = LiveTask(features=x, groundtruth=y, num_classes=args.classes,
-                        seed=args.seed)
+                        seed=args.seed, sweep_page=args.sweep_page)
     else:
-        task = make_emulated_task(args.dataset, args.arch, seed=args.seed)
+        task = make_emulated_task(args.dataset, args.arch, seed=args.seed,
+                                  sweep_page=args.sweep_page)
 
     res = run_mcal(task, service, cfg)
     X = task.pool_size

@@ -3,6 +3,10 @@
 Smoke-scale:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+Pool-sweep mode (MCAL machine-labeling pass through the serving runtime):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --score-pool 256 --sweep-page 8 --sweep-async
 """
 from __future__ import annotations
 
@@ -17,6 +21,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--score-pool", type=int, default=0,
+                    help="score a random N-row token pool through the "
+                         "paged sweep runtime instead of generating")
+    ap.add_argument("--sweep-page", type=int, default=0,
+                    help="sweep page rows (default: --batch)")
+    ap.add_argument("--sweep-async", action="store_true",
+                    help="run the pool sweep through the async handle "
+                         "(SweepFuture) instead of blocking")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -47,6 +59,38 @@ def main():
     engine = ServeEngine(model, params,
                          max_seq=args.prompt_len + args.gen + 8,
                          batch_size=args.batch)
+
+    if args.score_pool:
+        # MCAL machine-labeling pass: stream an N-row prompt pool through
+        # the jit'd scoring step as paged, double-buffered sweep work
+        pool = {"tokens": rng.integers(
+            0, cfg.vocab_size,
+            (args.score_pool, args.prompt_len)).astype(np.int32)}
+        if cfg.family == "audio":
+            pool["audio_frames"] = rng.normal(size=(
+                args.score_pool, cfg.encoder_tokens,
+                cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm" and cfg.frontend_tokens:
+            pool["patch_embeds"] = rng.normal(size=(
+                args.score_pool, cfg.frontend_tokens,
+                cfg.d_model)).astype(np.float32)
+        page = args.sweep_page or args.batch
+        warm = {k: v[:page] for k, v in pool.items()}
+        engine.score_pool(warm, page_rows=page)  # warm the page program
+        t0 = time.perf_counter()
+        if args.sweep_async:
+            stats = engine.score_pool_async(pool, page_rows=page).result()
+        else:
+            stats = engine.score_pool(pool, page_rows=page)
+        jax.block_until_ready(stats.margin)
+        dt = time.perf_counter() - t0
+        mode = "async" if args.sweep_async else "sync"
+        print(f"[serve] pool sweep ({mode}) scored {args.score_pool} rows "
+              f"in {dt:.2f}s ({args.score_pool / dt:.1f} rows/s, "
+              f"page={page})")
+        print("mean margin:", float(np.mean(np.asarray(stats.margin))))
+        return
+
     t0 = time.perf_counter()
     out = engine.generate(batch, args.gen)
     jax.block_until_ready(out)

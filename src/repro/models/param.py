@@ -8,6 +8,7 @@ sharding rules consume.  Keeps model code to pure functions over pytrees.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -49,7 +50,11 @@ def init_params(specs: Dict, rng: jax.Array) -> Dict:
     leaves, treedef = compat.tree_flatten_with_path(specs, is_leaf=_is_spec)
     out = []
     for path, spec in leaves:
-        key = jax.random.fold_in(rng, abs(hash(compat.keystr(path))) % (2**31))
+        # stable path digest: python's hash() is salted per process
+        # (PYTHONHASHSEED), which made "deterministic per path" a lie
+        # across runs — crc32 is reproducible everywhere
+        key = jax.random.fold_in(
+            rng, zlib.crc32(compat.keystr(path).encode()) % (2**31))
         if spec.init == "zeros":
             arr = jnp.zeros(spec.shape, spec.dtype)
         elif spec.init == "ones":

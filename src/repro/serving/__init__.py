@@ -1,1 +1,5 @@
 from repro.serving.engine import ServeEngine, make_decode_step, make_prefill_step  # noqa: F401
+from repro.serving.sweep import (  # noqa: F401
+    EngineSweepAdapter, FeatureSink, HostTaskAdapter, PoolSweepRunner,
+    RankTop1Sink, ServeSweepAdapter, StatsSink, SweepCheckpoint, SweepConfig,
+    SweepFuture, TopKSink)

@@ -91,6 +91,7 @@ class ServeEngine:
         self._prefill = make_prefill_step(model, mesh, policy)
         self._decode = make_decode_step(model, mesh, policy)
         self._score = make_scoring_step(model, mesh, policy)
+        self._sweep_runners: Dict[int, Any] = {}
 
     def prefill(self, batch: Dict) -> Tuple[jax.Array, Dict, int]:
         logits, cache = self._prefill(self.params, batch)
@@ -101,8 +102,46 @@ class ServeEngine:
 
     def score(self, batch: Dict):
         """Last-position ScoreStats for one batch (MCAL machine-labeling
-        pass — sweep the remaining pool through this)."""
+        pass — :meth:`score_pool` sweeps the remaining pool through
+        this)."""
         return self._score(self.params, batch)
+
+    def _sweep_runner(self, page_rows: int):
+        from repro.serving.sweep import (PoolSweepRunner, ServeSweepAdapter,
+                                         SweepConfig)
+        runner = self._sweep_runners.get(page_rows)
+        if runner is None:
+            runner = PoolSweepRunner(ServeSweepAdapter(self._score),
+                                     SweepConfig(page_rows=page_rows))
+            self._sweep_runners[page_rows] = runner
+        return runner
+
+    def score_pool(self, pool_batch: Dict, *, page_rows: Optional[int] = None,
+                   sink=None, checkpoint=None):
+        """MCAL's machine-labeling pass at pool scale: stream an
+        arbitrary-size row-aligned token pool (``tokens`` plus any per-row
+        extras) through the jit'd scoring step as paged, double-buffered
+        work (``serving.sweep``).  Default deliverable is the packed
+        last-position :class:`ScoreStats` trimmed to the pool size
+        (device-resident); pass a sweep sink (``TopKSink`` /
+        ``RankTop1Sink``) to fold the pool without materializing pool-wide
+        stats, and/or a ``SweepCheckpoint`` to resume a preempted sweep
+        mid-pool."""
+        from repro.serving.sweep import StatsSink
+        runner = self._sweep_runner(page_rows or self.batch_size)
+        return runner.run(self.params, pool_batch, sink or StatsSink(),
+                          checkpoint=checkpoint)
+
+    def score_pool_async(self, pool_batch: Dict, *,
+                         page_rows: Optional[int] = None, sink=None,
+                         checkpoint=None):
+        """:meth:`score_pool` as a ``SweepFuture`` — the sweep streams on
+        the runner's worker thread; ``result()`` is the synchronization
+        point."""
+        from repro.serving.sweep import StatsSink
+        runner = self._sweep_runner(page_rows or self.batch_size)
+        return runner.submit(self.params, pool_batch, sink or StatsSink(),
+                             checkpoint=checkpoint)
 
     def generate(self, batch: Dict, steps: int,
                  sampler: str = "greedy") -> jax.Array:

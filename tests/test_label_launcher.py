@@ -30,3 +30,10 @@ def test_launcher_defaults():
     args = build_parser().parse_args([])
     assert args.metric == "margin" and args.service == "amazon"
     assert not args.live and args.budget is None
+    assert args.sweep_page == 8192 and not args.sweep_async
+
+
+def test_launcher_sweep_flags():
+    args = build_parser().parse_args(["--sweep-page", "4096",
+                                      "--sweep-async"])
+    assert args.sweep_page == 4096 and args.sweep_async

@@ -92,6 +92,92 @@ def test_campaign_checkpoint_resume_mid_loop():
     assert a.S_size == b.S_size and a.B_size == b.B_size
 
 
+def test_resume_after_bailout_keeps_decision():
+    """Regression: state_dict used to drop decision/B_opt/theta_opt/
+    freeze_delta — a campaign resumed after bail-out forgot it chose
+    human_all and would happily keep iterating."""
+    ref = MCALCampaign(make_emulated_task("imagenet", "efficientnet-b0",
+                                          seed=0), AMAZON, MCALConfig(seed=0))
+    ref.bootstrap()
+    while not ref.done:
+        ref.iteration()
+    assert ref.decision == "human_all"
+    blob = json.dumps(ref.state_dict())
+
+    resumed = MCALCampaign(make_emulated_task("imagenet", "efficientnet-b0",
+                                              seed=0), AMAZON,
+                           MCALConfig(seed=0))
+    resumed.load_state_dict(json.loads(blob))
+    assert resumed.done and resumed.decision == "human_all"
+    assert resumed.B_opt == ref.B_opt
+    assert resumed.theta_opt == ref.theta_opt
+    assert resumed.freeze_delta == ref.freeze_delta
+    a, b = ref.commit(), resumed.commit()
+    assert a.decision == b.decision == "human_all"
+    assert a.total_cost == pytest.approx(b.total_cost, rel=1e-9)
+    assert b.measured_error == 0.0
+
+
+def test_kcenter_campaign_resume_picks_identical_candidates():
+    """k-center anchor state is rebuilt from B_idx on load (one feature
+    sweep), so a resumed kcenter campaign must pick the identical
+    candidate sequence as the uninterrupted one."""
+    cfg = MCALConfig(seed=0, metric="kcenter", max_iters=6)
+
+    def fresh():
+        return MCALCampaign(
+            make_emulated_task("cifar10", "resnet18", seed=0,
+                               pool_size=4000), AMAZON, cfg)
+
+    ref = fresh()
+    ref.bootstrap()
+    for _ in range(2):
+        ref.iteration()
+    blob = json.dumps(ref.state_dict())
+
+    resumed = fresh()
+    resumed.load_state_dict(json.loads(blob))
+    assert resumed._anchor_feats is not None   # rebuilt on load
+    while not ref.done:
+        ref.iteration()
+    while not resumed.done:
+        resumed.iteration()
+    np.testing.assert_array_equal(ref.pool.B_idx, resumed.pool.B_idx)
+    a, b = ref.commit(), resumed.commit()
+    assert a.total_cost == pytest.approx(b.total_cost, rel=1e-9)
+    assert a.S_size == b.S_size
+
+
+def test_async_sweep_campaign_matches_sync():
+    """sweep_async overlaps the M(.) sweep with the host-side fits/search;
+    prefix-stable rankings make it acquisition-identical to the
+    synchronous campaign."""
+    from repro.core import LiveTask
+    from repro.data.synth import make_classification
+
+    x, y = make_classification(800, num_classes=10, dim=16,
+                               difficulty=0.3, seed=4)
+
+    def run_campaign(sweep_async):
+        task = LiveTask(features=x, groundtruth=y, num_classes=10,
+                        epochs=3, seed=4, sweep_page=256,
+                        score_microbatch=256)
+        camp = MCALCampaign(task, AMAZON,
+                            MCALConfig(seed=4, max_iters=3,
+                                       delta0_frac=0.02,
+                                       sweep_async=sweep_async))
+        camp.bootstrap()
+        while not camp.done:
+            camp.iteration()
+        return camp
+
+    sync, async_ = run_campaign(False), run_campaign(True)
+    np.testing.assert_array_equal(sync.pool.B_idx, async_.pool.B_idx)
+    a, b = sync.commit(), async_.commit()
+    assert a.total_cost == pytest.approx(b.total_cost, rel=1e-9)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
 def test_relaxed_eps_saves_more():
     t5 = run_mcal(make_emulated_task("cifar10", "resnet18", seed=0), AMAZON,
                   MCALConfig(seed=0, eps_target=0.05))

@@ -179,8 +179,9 @@ def test_kernel_anchor_path_matches_oracle(seed, N, d, k, n_anchors,
 
 def test_live_task_kcenter_campaign_uses_device_path(monkeypatch):
     """A kcenter MCAL campaign over an engine-backed LiveTask routes M(.)
-    through kcenter_candidates (device features + device greedy loop),
-    accumulates anchors across iterations, and completes."""
+    through kcenter_candidates (device features + device greedy loop)
+    with anchors covering the full labeled set B under the CURRENT
+    classifier (rebuilt each training round), and completes."""
     from repro.core import LiveTask, MCALCampaign, MCALConfig
     from repro.core.cost import AMAZON
     from repro.data.synth import make_classification
@@ -193,17 +194,21 @@ def test_live_task_kcenter_campaign_uses_device_path(monkeypatch):
     orig = LiveTask.kcenter_candidates
     monkeypatch.setattr(
         LiveTask, "kcenter_candidates",
-        lambda self, k, cand, anchors=None: calls.append(len(cand)) or
+        lambda self, k, cand, anchors=None:
+        calls.append((len(cand), len(anchors))) or
         orig(self, k, cand, anchors=anchors))
     camp = MCALCampaign(task, AMAZON,
                         MCALConfig(metric="kcenter", seed=3,
                                    delta0_frac=0.02, max_iters=3))
     camp.bootstrap()
-    n0 = len(camp.pool.B_idx)
+    sizes = [len(camp.pool.B_idx)]
     camp.iteration()
+    sizes.append(len(camp.pool.B_idx))
     camp.iteration()
     assert len(calls) >= 2          # device path taken each acquisition
-    assert camp._anchor_feats is not None
-    assert camp._anchor_feats.shape[1] == task.hidden
-    # the anchor set grows by exactly the bought kcenter picks
-    assert len(camp._anchor_feats) == len(camp.pool.B_idx) - n0 > 0
+    # each acquisition's anchors cover exactly the labeled set B at that
+    # point (features under the then-current classifier)
+    assert [a for _, a in calls[:2]] == sizes[:2]
+    # the per-round anchor cache is rebuildable from B_idx alone
+    feats = camp._anchor_features()
+    assert feats.shape == (len(camp.pool.B_idx), task.hidden)

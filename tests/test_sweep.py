@@ -1,0 +1,334 @@
+"""Streaming pool-sweep runtime vs its host/engine oracles.
+
+Every sink must agree EXACTLY with its oracle — the top-k reservoir with
+``PoolScoringEngine.top_k`` (``lax.top_k`` over the full pool), the
+streaming rank with ``selection.rank_for_machine_labeling`` over full-pool
+stats, the feature emitter with ``PoolScoringEngine.pool_features`` — and
+a mid-pool cursor save/restore must be bit-identical to an uninterrupted
+sweep.  The grids include ragged final pages and duplicate-row ties (both
+sides tie-break by first global index); page sizes are pow2 multiples of
+the engine microbatch so every row is computed inside a microbatch of the
+same shape on both paths (the module docstring of ``serving.sweep``
+explains why that makes exactness a sound contract).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core import selection as sel
+from repro.core.scoring import PoolScoringEngine, ScoringConfig
+from repro.models.registry import get_model
+from repro.serving.sweep import (EngineSweepAdapter, FeatureSink,
+                                 HostTaskAdapter, PoolSweepRunner,
+                                 RankTop1Sink, StatsSink, SweepCheckpoint,
+                                 SweepConfig, TopKSink)
+
+METRICS = ("margin", "entropy", "least_confidence")
+
+
+@pytest.fixture(scope="module")
+def sweep_setup():
+    cfg = ModelConfig(name="sweep-probe", family="mlp", num_layers=2,
+                      d_model=64, num_classes=10, input_dim=32,
+                      dtype="float32", remat="none")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    x = np.random.default_rng(0).normal(size=(2000, 32)).astype(np.float32)
+    engine = PoolScoringEngine(model, ScoringConfig(microbatch=256))
+    runner = PoolSweepRunner(EngineSweepAdapter(engine),
+                             SweepConfig(page_rows=512))
+    return engine, runner, params, x
+
+
+# ---------------------------------------------------------------------------
+# sink oracle grids
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n", [100, 512, 1000, 1537, 2000])
+@pytest.mark.parametrize("k", [1, 7, 64])
+def test_topk_sink_matches_engine_topk(sweep_setup, metric, n, k):
+    """Top-k reservoir == lax.top_k over the full pool, exactly — order
+    included (most-uncertain-first), across ragged final pages."""
+    engine, runner, params, x = sweep_setup
+    got = runner.run(params, x[:n], TopKSink(k, metric))
+    want = engine.top_k(params, x[:n], k, metric)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_topk_sink_duplicate_row_ties(sweep_setup):
+    """Duplicate rows spanning pages produce exact score ties; both sides
+    must break them by FIRST global index."""
+    engine, runner, params, x = sweep_setup
+    xd = np.tile(x[:50], (20, 1))   # 1000 rows, 50 distinct, cross-page ties
+    got = runner.run(params, xd, TopKSink(64, "margin"))
+    want = engine.top_k(params, xd, 64, "margin")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_topk_sink_k_larger_than_pool(sweep_setup):
+    engine, runner, params, x = sweep_setup
+    got = runner.run(params, x[:100], TopKSink(500, "margin"))
+    want = engine.top_k(params, x[:100], 500, "margin")
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (100,)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n", [100, 1000, 1537, 2000])
+def test_rank_sink_matches_host_ranking(sweep_setup, metric, n):
+    """Streaming L(.) rank + top1 == rank_for_machine_labeling over the
+    engine's full-pool stats, exactly (same fp32 field, same stable
+    argsort)."""
+    engine, runner, params, x = sweep_setup
+    order, top1 = runner.run(params, x[:n], RankTop1Sink(metric))
+    stats, _ = engine.score_host(params, x[:n])
+    np.testing.assert_array_equal(
+        order, sel.rank_for_machine_labeling(stats, metric))
+    np.testing.assert_array_equal(top1, np.asarray(stats.top1, np.int64))
+
+
+@pytest.mark.parametrize("n", [512, 1300, 2000])
+def test_feature_sink_matches_pool_features(sweep_setup, n):
+    """Paged feature emission is bit-equal to the engine's unpaged
+    device-resident emission (the k-center consumer's contract)."""
+    engine, runner, params, x = sweep_setup
+    feats = runner.run(params, x[:n], FeatureSink())
+    assert isinstance(feats, jax.Array)   # device-resident, no host trip
+    want = engine.pool_features(params, x[:n])
+    np.testing.assert_array_equal(np.asarray(feats), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [100, 1537, 2000])
+def test_stats_sink_matches_engine_score(sweep_setup, n):
+    engine, runner, params, x = sweep_setup
+    packed = runner.run(params, x[:n], StatsSink())
+    stats, _ = engine.score_host(params, x[:n])
+    np.testing.assert_array_equal(np.asarray(packed.margin), stats.margin)
+    np.testing.assert_array_equal(np.asarray(packed.entropy), stats.entropy)
+    np.testing.assert_array_equal(np.asarray(packed.top1), stats.top1)
+
+
+# ---------------------------------------------------------------------------
+# resumable cursor
+# ---------------------------------------------------------------------------
+
+
+def _sink_grid():
+    return [TopKSink(32, "entropy"), RankTop1Sink("margin"), FeatureSink(),
+            StatsSink()]
+
+
+def _fresh(sink):
+    return type(sink)(**({"k": sink.k, "metric": sink.metric}
+                         if isinstance(sink, TopKSink) else
+                         {"metric": sink.metric}
+                         if isinstance(sink, RankTop1Sink) else {}))
+
+
+def _as_arrays(result):
+    if isinstance(result, tuple):
+        return [np.asarray(r) for r in result]
+    return [np.asarray(result)]
+
+
+@pytest.mark.parametrize("sink", _sink_grid(), ids=lambda s: s.kind)
+@pytest.mark.parametrize("stop_page", [0, 1, 2, 3, 4])
+def test_cursor_save_restore_bit_identical(sweep_setup, sink, stop_page):
+    """Cut the cursor at every page boundary (including before the first
+    and after the last page), round-trip it through JSON, resume with a
+    FRESH sink instance: the fold must be bit-identical to an
+    uninterrupted sweep."""
+    _, runner, params, x = sweep_setup    # 2000 rows / 512-page = 4 pages
+    ckpt = runner.run_until(params, x, _fresh(sink), stop_page)
+    assert ckpt.next_page == min(stop_page, runner.n_pages(x.shape[0]))
+    restored = SweepCheckpoint.from_json(ckpt.to_json())
+    resumed = runner.run(params, x, _fresh(sink), checkpoint=restored)
+    uninterrupted = runner.run(params, x, _fresh(sink))
+    for a, b in zip(_as_arrays(resumed), _as_arrays(uninterrupted)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_cursor_checkpoint_is_json(sweep_setup):
+    _, runner, params, x = sweep_setup
+    ckpt = runner.run_until(params, x, RankTop1Sink(), 2)
+    blob = json.loads(ckpt.to_json())
+    assert blob["next_page"] == 2 and blob["n"] == 2000
+    assert blob["sink_kind"] == "rank"
+
+
+def test_cursor_validation_rejects_mismatches(sweep_setup):
+    _, runner, params, x = sweep_setup
+    ckpt = runner.run_until(params, x, RankTop1Sink(), 1)
+    with pytest.raises(ValueError):   # wrong sink kind
+        runner.run(params, x, TopKSink(8, "margin"), checkpoint=ckpt)
+    with pytest.raises(ValueError):   # wrong pool size
+        runner.run(params, x[:1000], RankTop1Sink(), checkpoint=ckpt)
+    other = PoolSweepRunner(runner.adapter, SweepConfig(page_rows=256))
+    with pytest.raises(ValueError):   # wrong page size
+        other.run(params, x, RankTop1Sink(), checkpoint=ckpt)
+    with pytest.raises(ValueError):   # wrong rank metric
+        runner.run(params, x, RankTop1Sink("entropy"), checkpoint=ckpt)
+    tk = runner.run_until(params, x, TopKSink(16, "margin"), 1)
+    with pytest.raises(ValueError):   # wrong top-k metric
+        runner.run(params, x, TopKSink(16, "entropy"), checkpoint=tk)
+    with pytest.raises(ValueError):   # wrong k
+        runner.run(params, x, TopKSink(8, "margin"), checkpoint=tk)
+
+
+def test_cursor_unfilled_reservoir_is_strict_json(sweep_setup):
+    """A top-k reservoir checkpointed before k valid rows have folded
+    holds -inf sentinels; the cursor must still be strict JSON (no
+    -Infinity literals) and resume bit-identically."""
+    _, runner, params, x = sweep_setup
+    ckpt = runner.run_until(params, x, TopKSink(1000, "margin"), 1)
+    blob = ckpt.to_json()
+    json.loads(blob)   # json.dumps(allow_nan=False) round-trip holds
+    assert "Infinity" not in blob
+    resumed = runner.run(params, x, TopKSink(1000, "margin"),
+                         checkpoint=SweepCheckpoint.from_json(blob))
+    full = runner.run(params, x, TopKSink(1000, "margin"))
+    np.testing.assert_array_equal(resumed, full)
+
+
+# ---------------------------------------------------------------------------
+# async handle
+# ---------------------------------------------------------------------------
+
+
+def test_submit_future_matches_sync_run(sweep_setup):
+    _, runner, params, x = sweep_setup
+    fut = runner.submit(params, x, TopKSink(16, "margin"))
+    sync = runner.run(params, x, TopKSink(16, "margin"))
+    np.testing.assert_array_equal(fut.result(), sync)
+    assert fut.done()
+
+
+def test_submit_map_result(sweep_setup):
+    _, runner, params, x = sweep_setup
+    cand = np.arange(5000, 7000)
+    fut = runner.submit(params, x, TopKSink(8, "margin"),
+                        map_result=lambda rows: cand[rows])
+    sync = cand[runner.run(params, x, TopKSink(8, "margin"))]
+    np.testing.assert_array_equal(fut.result(), sync)
+
+
+# ---------------------------------------------------------------------------
+# host adapter (emulated paper-scale replays) + task routing
+# ---------------------------------------------------------------------------
+
+
+def test_emulated_machine_label_sweep_matches_host_path():
+    from repro.core import make_emulated_task
+
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=5000, sweep_page=1024)
+    task.train(np.arange(200), task.human_label(np.arange(200)))
+    idx = np.arange(300, 4800)
+    order, top1 = task.machine_label_sweep(idx, "margin")
+    stats, _ = task.score(idx)
+    np.testing.assert_array_equal(
+        order, sel.rank_for_machine_labeling(stats, "margin"))
+    np.testing.assert_array_equal(top1, np.asarray(stats.top1, np.int64))
+
+
+def test_host_adapter_cursor_resume():
+    from repro.core import make_emulated_task
+
+    task = make_emulated_task("cifar10", "resnet18", seed=1,
+                              pool_size=3000)
+    task.train(np.arange(100), task.human_label(np.arange(100)))
+    runner = PoolSweepRunner(HostTaskAdapter(task.score),
+                             SweepConfig(page_rows=700))
+    idx = np.arange(3000)
+    ckpt = runner.run_until(None, idx, RankTop1Sink(), 2)
+    resumed = runner.run(None, idx, RankTop1Sink(),
+                         checkpoint=SweepCheckpoint.from_json(ckpt.to_json()))
+    full = runner.run(None, idx, RankTop1Sink())
+    np.testing.assert_array_equal(resumed[0], full[0])
+    np.testing.assert_array_equal(resumed[1], full[1])
+
+
+def test_live_task_sweep_routing_matches_engine_paths():
+    """LiveTask's rerouted pool passes (top-k, L(.) rank, anchors) agree
+    with the direct engine paths."""
+    from repro.core import LiveTask
+    from repro.data.synth import make_classification
+
+    x, y = make_classification(900, num_classes=10, dim=16,
+                               difficulty=0.3, seed=2)
+    task = LiveTask(features=x, groundtruth=y, num_classes=10, epochs=3,
+                    seed=2, sweep_page=256, score_microbatch=256)
+    task.train(np.arange(200), y[:200])
+
+    cand = np.arange(300, 900)
+    picks = task.topk_candidates("margin", 32, cand)
+    want = cand[task._engine.top_k(task._params, task._pool(cand), 32,
+                                   "margin")]
+    np.testing.assert_array_equal(picks, want)
+
+    order, top1 = task.machine_label_sweep(cand, "margin")
+    stats, _ = task.score(cand)
+    np.testing.assert_array_equal(
+        order, sel.rank_for_machine_labeling(stats, "margin"))
+    np.testing.assert_array_equal(top1, np.asarray(stats.top1, np.int64))
+
+    anchors = task.anchor_features(np.arange(200))
+    want_feats = np.asarray(task._engine.pool_features(
+        task._params, task._pool(np.arange(200))), np.float32)
+    np.testing.assert_array_equal(anchors, want_feats)
+
+    fut = task.submit_candidates("margin", 32, cand)
+    np.testing.assert_array_equal(fut.result(), picks)
+
+
+# ---------------------------------------------------------------------------
+# serving-side pool sweep
+# ---------------------------------------------------------------------------
+
+
+def test_serve_engine_score_pool_pages_match_batch_loop():
+    """ServeEngine.score_pool == the per-batch score loop (the pre-sweep
+    pattern) to serving fp tolerance, ragged tail included; and the
+    cursor resumes mid-pool."""
+    import jax.numpy as jnp
+    from repro.configs import get_smoke
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_smoke("qwen2-1.5b")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    N, T, page = 10, 8, 4
+    pool = {"tokens": rng.integers(0, cfg.vocab_size, (N, T)).astype(
+        np.int32)}
+    eng = ServeEngine(model, params, max_seq=T + 4, batch_size=page)
+
+    packed = eng.score_pool(pool, page_rows=page)
+    assert int(packed.margin.shape[0]) == N
+
+    margins, top1 = [], []
+    for lo in range(0, N, page):
+        stats = eng.score({"tokens": jnp.asarray(pool["tokens"][lo:lo + page])})
+        margins.append(np.asarray(stats.margin))
+        top1.append(np.asarray(stats.top1))
+    np.testing.assert_allclose(np.asarray(packed.margin),
+                               np.concatenate(margins), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(packed.top1),
+                                  np.concatenate(top1))
+
+    runner = eng._sweep_runner(page)
+    ckpt = runner.run_until(params, pool, StatsSink(), 1)
+    resumed = runner.run(params, pool, StatsSink(),
+                         checkpoint=SweepCheckpoint.from_json(ckpt.to_json()))
+    np.testing.assert_array_equal(np.asarray(resumed.margin),
+                                  np.asarray(packed.margin))
+
+    fut = eng.score_pool_async(pool, page_rows=page)
+    np.testing.assert_array_equal(np.asarray(fut.result().margin),
+                                  np.asarray(packed.margin))
