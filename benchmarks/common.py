@@ -8,8 +8,9 @@ carries the headline metric the paper table/figure reports).
 from __future__ import annotations
 
 import dataclasses
+import re
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -17,9 +18,25 @@ class Row:
     name: str
     us_per_call: float
     derived: str
+    # optional machine-readable payload (pool sizes, enforced speedups,
+    # ...) carried into the BENCH_<run>.json trajectory file
+    meta: Optional[Dict] = None
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+    def record(self) -> Dict:
+        """The row as a JSON-ready dict: explicit ``meta`` merged over
+        whatever ``speedup=<x>x`` figure the derived column carries, so
+        benchmarks that predate ``meta`` still land in the trajectory."""
+        out = {"name": self.name, "us_per_call": round(self.us_per_call, 1),
+               "derived": self.derived}
+        m = re.search(r"speedup=([0-9.]+)x", self.derived)
+        if m:
+            out["speedup"] = float(m.group(1))
+        if self.meta:
+            out.update(self.meta)
+        return out
 
 
 def timed(fn: Callable, *args, repeat: int = 1, **kw):

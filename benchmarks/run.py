@@ -13,18 +13,30 @@
   bench_imagenet_bailout   §5.1 ImageNet
   bench_kernels            margin_head scoring structure
   bench_sweep              streaming pool-sweep runtime (>= 2x gate)
+  bench_fit                fused retrain engine (>= 2x gate, exact params)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
 CI smoke: PYTHONPATH=src python -m benchmarks.run --smoke
-          (small-shape sweep + scoring + k-center engine legs, speedup
-          gates enforced — the CI matrix runs this on both jax legs)
+          (small-shape fit + sweep + scoring + k-center engine legs,
+          speedup gates enforced — the CI matrix runs this on both jax
+          legs)
+
+Every invocation additionally writes a machine-readable
+``BENCH_<run>.json`` (``--json`` overrides the path, ``--run-id`` the
+run name): per-row us_per_call + parsed per-gate speedups + pool sizes +
+the jax version/backend, so the perf trajectory is tracked across PRs —
+CI uploads it as a workflow artifact, and each PR that moves a gate
+checks a record into ``benchmarks/history/`` (one JSON per PR; the
+cross-PR trajectory lives in-tree, not just in CI retention).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
+import time
 import traceback
 
 MODULES = (
@@ -40,17 +52,41 @@ MODULES = (
     "bench_imagenet_bailout",
     "bench_kernels",
     "bench_sweep",
+    "bench_fit",
 )
 
 
-def run_smoke() -> int:
-    """The CI smoke leg: small-shape sweep-runtime + engine benchmarks
-    with their speedup gates ENFORCED (a gate miss fails the job)."""
-    from benchmarks import bench_selection, bench_sweep
+def write_bench_json(path: str, run_id: str, mode: str, rows, errors) -> None:
+    """The cross-PR perf-trajectory record: one JSON per benchmark run."""
+    import jax
+
+    blob = {
+        "run": run_id,
+        "mode": mode,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": [r.record() for r in rows],
+        "gates": {r.name: r.record()["speedup"] for r in rows
+                  if "speedup" in r.record()},
+        "errors": errors,
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=2)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+def run_smoke():
+    """The CI smoke leg: small-shape fit-engine + sweep-runtime + engine
+    benchmarks with their speedup gates ENFORCED (a gate miss fails the
+    job).  Returns (status, rows, errors)."""
+    from benchmarks import bench_fit, bench_selection, bench_sweep
 
     print("name,us_per_call,derived")
-    status = 0
+    status, rows, errors = 0, [], []
     for name, fn in (
+        ("bench_fit[smoke]", bench_fit.run_smoke),
         ("bench_sweep[smoke]", bench_sweep.run_smoke),
         ("bench_selection[scoring]",
          lambda: bench_selection.run_scoring(enforce=True)),
@@ -59,40 +95,56 @@ def run_smoke() -> int:
     ):
         try:
             for row in fn():
+                rows.append(row)
                 print(row.csv(), flush=True)
         except Exception as e:
             status = 1
+            errors.append(f"{name}:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
             print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
-    return status
+    return status, rows, errors
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: sweep + scoring + k-center engine legs "
-                         "at small shapes, speedup gates enforced")
+                    help="CI smoke: fit + sweep + scoring + k-center "
+                         "engine legs at small shapes, speedup gates "
+                         "enforced")
+    ap.add_argument("--run-id", default="",
+                    help="run name for the BENCH_<run>.json record "
+                         "(default: the mode + jax version)")
+    ap.add_argument("--json", default="",
+                    help="path for the machine-readable record "
+                         "(default: BENCH_<run>.json)")
     args = ap.parse_args()
 
+    def finish(mode: str, status: int, rows, errors):
+        import jax
+        run_id = args.run_id or f"{mode}-jax{jax.__version__}"
+        path = args.json or f"BENCH_{run_id}.json"
+        write_bench_json(path, run_id, mode, rows, errors)
+        sys.exit(status)
+
     if args.smoke:
-        sys.exit(run_smoke())
+        finish("smoke", *run_smoke())
 
     print("name,us_per_call,derived")
-    failed = []
+    rows, errors = [], []
     for name in MODULES:
         if args.only and args.only not in name:
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             for row in mod.run():
+                rows.append(row)
                 print(row.csv(), flush=True)
         except Exception as e:
-            failed.append(name)
+            errors.append(f"{name}:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
             print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
-    if failed:
-        sys.exit(1)
+    finish(args.only or "full", 1 if errors else 0, rows, errors)
 
 
 if __name__ == "__main__":

@@ -89,18 +89,25 @@ class EmulatedTask:
         feats = np.stack([conf, self.u[idx]], axis=1)
         return stats, feats
 
-    def machine_label_sweep(self, idx: np.ndarray, metric: str = "margin"):
+    def machine_label_sweep(self, idx: np.ndarray, metric: str = "margin",
+                            *, checkpoint=None, checkpoint_every: int = 0,
+                            on_checkpoint=None):
         """L(.)/commit pass through the same paged sweep runtime the live
         path uses (host adapter, ``sweep_page`` rows per page), so paper-
         scale replays exercise the cursor/sink machinery without a device
         in the loop.  Per-sample draws are deterministic per global index,
-        so the paged fold is exactly the full-pool ranking."""
+        so the paged fold is exactly the full-pool ranking.  Cursor
+        kwargs mirror ``LiveTask.machine_label_sweep`` (replay campaigns
+        driven through the launcher's ``--state`` file resume a preempted
+        commit sweep mid-pool)."""
         from repro.serving.sweep import (HostTaskAdapter, PoolSweepRunner,
                                          RankTop1Sink, SweepConfig)
         runner = PoolSweepRunner(HostTaskAdapter(self.score),
                                  SweepConfig(page_rows=self.sweep_page))
         return runner.run(None, np.asarray(idx, np.int64),
-                          RankTop1Sink(metric))
+                          RankTop1Sink(metric), checkpoint=checkpoint,
+                          checkpoint_every=checkpoint_every,
+                          on_checkpoint=on_checkpoint)
 
     def kcenter_candidates(self, k: int, candidates: np.ndarray,
                            anchors: Optional[np.ndarray] = None):

@@ -62,6 +62,9 @@ class MCALConfig:
     budget: Optional[float] = None  # set -> budget-constrained variant
     sweep_async: bool = False       # overlap the M(.) sweep with the
                                     # host-side fits + joint search
+    fit_async: bool = False         # defer each retrain + its measurement
+                                    # sweep onto the fit-engine worker,
+                                    # synchronizing at the next consumer
 
 
 @dataclasses.dataclass
@@ -153,6 +156,15 @@ class MCALCampaign:
         self._anchor_feats: Optional[np.ndarray] = None
         # in-flight async M(.) sweep: (submitted_k, SweepFuture)
         self._pending: Optional[Tuple[int, object]] = None
+        # in-flight async retrain + measurement: (|B| at submit, FitFuture)
+        self._fit_pending: Optional[Tuple[int, object]] = None
+        # memoized power-law/cost fits: (history key, laws, cost model)
+        self._fit_models_cache: Optional[Tuple] = None
+        # commit-sweep cursor wiring (set by the launcher, not MCALConfig:
+        # these are process-local restart plumbing, not campaign policy)
+        self.sweep_checkpoint_every = 0          # pages between cursor cuts
+        self.on_sweep_checkpoint = None          # callback(SweepCheckpoint)
+        self.resume_sweep_checkpoint = None      # cursor to resume from
         self._iter = 0
 
     # -- bootstrap ----------------------------------------------------------
@@ -177,19 +189,75 @@ class MCALCampaign:
     def _train_and_measure(self):
         p = self.pool
         self._anchor_feats = None   # the representation moves every retrain
+        nB = len(p.B_idx)
+        if self.cfg.fit_async and hasattr(self.task, "submit_train"):
+            # Defer the retrain + its L(.) measurement sweep onto the fit
+            # engine's worker thread: the retrain dispatch overlaps the
+            # measurement's host-side paging, and in architecture
+            # selection every candidate's retrain runs concurrently.
+            # The training cost is paid UP FRONT (it must be known
+            # without training — deterministic c_u * |B| pricing; a
+            # measured-cost task falls through to the synchronous path),
+            # so the shared ledger every sibling campaign's records and
+            # bailout/budget checks read is never stale while the fit is
+            # in flight.  _sync_fit() folds the measurement at the next
+            # consumer (the top of iteration()/search()/commit()), so
+            # iteration records are identical to the synchronous
+            # campaign's.
+            c = (self.task.train_cost(nB)
+                 if hasattr(self.task, "train_cost") else None)
+            if c is not None:
+                self._pay_training(nB, c)
+                T_idx, labels_T = p.T_idx, p.labels[p.T_idx]
+
+                def measure():
+                    stats_T, _ = self.task.score(T_idx)
+                    return stats_T, self.task.eval_correct(T_idx, labels_T)
+
+                self._fit_pending = (nB, self.task.submit_train(
+                    p.B_idx, p.labels[p.B_idx], then=measure))
+                return
         c = self.task.train(p.B_idx, p.labels[p.B_idx])
-        p.ledger.pay_training(c)
-        self.own_training += c
-        self.train_sizes.append(len(p.B_idx))
-        self.train_costs.append(c)
+        self._pay_training(nB, c)
         stats_T, _ = self.task.score(p.T_idx)
         correct = self.task.eval_correct(p.T_idx, p.labels[p.T_idx])
+        self._record_measurement(nB, stats_T, correct)
+
+    def _pay_training(self, nB: int, c: float):
+        p = self.pool
+        p.ledger.pay_training(c)
+        self.own_training += c
+        self.train_sizes.append(nB)
+        self.train_costs.append(c)
+
+    def _record_measurement(self, nB: int, stats_T, correct):
         curve = sel.machine_label_error_curve(
             stats_T, correct, self.cfg.thetas, self.cfg.l_metric)
         for t, e in zip(self.cfg.thetas, curve):
-            self.eps_hist[t].append((len(p.B_idx), float(e)))
+            self.eps_hist[t].append((nB, float(e)))
+
+    def _sync_fit(self):
+        """Fold an in-flight async retrain (``fit_async``): collect its
+        measurement sweep from the worker and record it exactly as the
+        synchronous path would have (the training cost was already paid
+        at submit time)."""
+        if self._fit_pending is None:
+            return
+        nB, fut = self._fit_pending
+        self._fit_pending = None
+        _c, (stats_T, correct) = fut.result()
+        self._record_measurement(nB, stats_T, correct)
 
     def _fit_models(self) -> Tuple[Dict[float, PowerLaw], TrainCostModel]:
+        """Fit the per-theta truncated power laws + the training-cost
+        model, memoized on the measurement-history key (iteration() reads
+        the fits several times per loop, and a resumed campaign restores
+        the persisted fits into this cache so it starts without refits)."""
+        key = (len(self.train_sizes),
+               sum(len(v) for v in self.eps_hist.values()))
+        if self._fit_models_cache is not None \
+                and self._fit_models_cache[0] == key:
+            return self._fit_models_cache[1], self._fit_models_cache[2]
         laws = {}
         for t, pts in self.eps_hist.items():
             sizes = [s for s, _ in pts]
@@ -198,9 +266,11 @@ class MCALCampaign:
                                     truncated=len(pts) >= self.cfg.min_fit_points)
         cm = TrainCostModel(exponent=self.cfg.cost_exponent).fit(
             self.train_sizes, self.train_costs)
+        self._fit_models_cache = (key, laws, cm)
         return laws, cm
 
     def search(self, keep_surface: Optional[bool] = None) -> SearchResult:
+        self._sync_fit()
         laws, cm = self._fit_models()
         p = self.pool
         kw = dict(pool_size=self.task.pool_size, test_size=len(p.T_idx),
@@ -217,7 +287,8 @@ class MCALCampaign:
     def iteration(self, *, acquire: bool = True,
                   forced_acquisition: Optional[np.ndarray] = None):
         assert not self.done
-        p = self.pool
+        self._sync_fit()   # fold last iteration's async retrain first:
+        p = self.pool      # everything below reads its params/measurement
         X = self.task.pool_size
         # async overlap: launch this iteration's M(.) sweep (device) before
         # the host-side power-law fits + joint search below; acquire()
@@ -400,6 +471,7 @@ class MCALCampaign:
 
     def propose_acquisition(self, k: int) -> np.ndarray:
         """Rank candidates by this campaign's M(.) without committing."""
+        self._sync_fit()
         cand = self.pool.unlabeled_candidates()
         return self._rank_candidates(min(k, len(cand)), cand)
 
@@ -409,10 +481,20 @@ class MCALCampaign:
         tasks stream ``idx`` through the paged pool-sweep runtime (only
         the rank field + top1 per row reach the host); the predicted
         labels come from the same sweep's top1, so committing a campaign
-        costs a single pool pass."""
+        costs a single pool pass.  Cursor-capable tasks additionally cut a
+        resumable ``SweepCheckpoint`` every ``sweep_checkpoint_every``
+        pages (and resume one), so a preempted commit sweep restarts
+        mid-pool from the launcher's ``--state`` file."""
         if hasattr(self.task, "machine_label_sweep"):
-            order, pred = self.task.machine_label_sweep(idx,
-                                                        self.cfg.l_metric)
+            kw = {}
+            if self.sweep_checkpoint_every or \
+                    self.resume_sweep_checkpoint is not None:
+                kw = dict(checkpoint=self.resume_sweep_checkpoint,
+                          checkpoint_every=self.sweep_checkpoint_every,
+                          on_checkpoint=self.on_sweep_checkpoint)
+                self.resume_sweep_checkpoint = None   # consumed
+            order, pred = self.task.machine_label_sweep(
+                idx, self.cfg.l_metric, **kw)
             return np.asarray(order, np.int64), np.asarray(pred, np.int64)
         stats, _ = self.task.score(idx)
         order = sel.rank_for_machine_labeling(stats, self.cfg.l_metric)
@@ -420,6 +502,7 @@ class MCALCampaign:
 
     # -- commit ----------------------------------------------------------------
     def commit(self) -> MCALResult:
+        self._sync_fit()
         p = self.pool
         X = self.task.pool_size
         remaining = p.unlabeled_candidates()
@@ -497,8 +580,44 @@ class MCALCampaign:
         """JSON-serializable loop state: a preempted labeling campaign
         resumes mid-loop from this (the classifier itself is retrained from
         the persisted label set — labels are the expensive thing)."""
+        self._sync_fit()
         p = self.pool
+        fitted = None
+        if self.train_sizes:
+            laws, cm = self._fit_models()
+            fitted = {
+                # np.inf (plain power law) is not strict JSON -> None
+                "laws": {str(t): {
+                    "alpha": law.alpha, "gamma": law.gamma,
+                    "k": None if not np.isfinite(law.k) else law.k,
+                    "resid_std": law.resid_std, "n_points": law.n_points}
+                    for t, law in laws.items()},
+                "cost_model": {"c_u": cm.c_u, "exponent": cm.exponent},
+            }
         return {
+            # fitted power-law/cost state + the engines' pack-shape compile
+            # cache keys: a resumed paper-scale replay starts without
+            # refits and prewarms its compiled programs upfront.
+            "fitted": fitted,
+            "pack_keys": (self.task.pack_cache_keys()
+                          if hasattr(self.task, "pack_cache_keys")
+                          else None),
+            # the full iteration trace (minus any keep_surface search
+            # payloads) + the acquisition RNG stream: a resumed campaign
+            # reports the whole trajectory and --metric random draws
+            # continue where the preempted stream stopped.
+            "history": [{
+                "i": int(r.i), "B_size": int(r.B_size),
+                "delta": int(r.delta),
+                "eps_theta": {str(t): float(e)
+                              for t, e in r.eps_theta.items()},
+                "cstar": float(r.cstar), "B_opt": int(r.B_opt),
+                "theta_opt": float(r.theta_opt),
+                "feasible": bool(r.feasible), "stable": bool(r.stable),
+                "human_spent": float(r.human_spent),
+                "training_spent": float(r.training_spent)}
+                for r in self.history],
+            "rng": self.rng.bit_generator.state,
             "labels": p.labels.tolist(),
             "is_test": np.nonzero(p.is_test)[0].tolist(),
             "B_idx": p.B_idx.tolist(),
@@ -523,6 +642,10 @@ class MCALCampaign:
 
     def load_state_dict(self, s: Dict):
         from repro.core.cost import CostLedger
+        # fold any in-flight async retrain first: discarding its future
+        # while the worker still trains would race the resume retrain
+        # below on the same task/engine buffers
+        self._sync_fit()
         p = self.pool
         p.labels = np.asarray(s["labels"], np.int64)
         p.is_test[:] = False
@@ -549,10 +672,43 @@ class MCALCampaign:
         self.B_opt = int(s.get("B_opt", 0))
         self.theta_opt = float(s.get("theta_opt", 0.0))
         self.freeze_delta = bool(s.get("freeze_delta", False))
+        # iteration trace + acquisition RNG stream (absent in pre-PR4
+        # checkpoints -> empty history / reseeded stream, as before)
+        self.history = [IterationRecord(
+            i=int(r["i"]), B_size=int(r["B_size"]), delta=int(r["delta"]),
+            eps_theta={float(t): e for t, e in r["eps_theta"].items()},
+            cstar=float(r["cstar"]), B_opt=int(r["B_opt"]),
+            theta_opt=float(r["theta_opt"]), feasible=bool(r["feasible"]),
+            stable=bool(r["stable"]), human_spent=float(r["human_spent"]),
+            training_spent=float(r["training_spent"]))
+            for r in s.get("history", [])]
+        if "rng" in s:
+            self.rng = np.random.default_rng()
+            self.rng.bit_generator.state = s["rng"]
         self._pending = None
+        self._fit_pending = None
+        # restore the fitted power-law/cost state into the memo cache so
+        # the first search() after resume runs without a single refit
+        self._fit_models_cache = None
+        fitted = s.get("fitted")
+        if fitted:
+            laws = {float(t): PowerLaw(
+                alpha=f["alpha"], gamma=f["gamma"],
+                k=np.inf if f["k"] is None else f["k"],
+                resid_std=f["resid_std"], n_points=int(f["n_points"]))
+                for t, f in fitted["laws"].items()}
+            cm = TrainCostModel(c_u=fitted["cost_model"]["c_u"],
+                                exponent=int(fitted["cost_model"]["exponent"]))
+            key = (len(self.train_sizes),
+                   sum(len(v) for v in self.eps_hist.values()))
+            self._fit_models_cache = (key, laws, cm)
         # retrain the classifier on the persisted label set
         self._anchor_feats = None
         self.task.train(p.B_idx, p.labels[p.B_idx])
+        # prewarm the engines' pack-shape compile caches (best understood
+        # as paying the resumed campaign's compiles upfront)
+        if hasattr(self.task, "prewarm_caches"):
+            self.task.prewarm_caches(s.get("pack_keys"))
         if self.cfg.metric == "kcenter":
             # one feature sweep over B_idx rebuilds the k-center anchor
             # state under the freshly retrained classifier
@@ -604,6 +760,10 @@ def select_architecture(
             if i == 0:
                 continue
             camps[n]._train_and_measure()
+        for c in camps.values():
+            # fold async retrains before the election reads the histories
+            # (with fit_async every candidate's retrain ran concurrently)
+            c._sync_fit()
         cur = argmin_cstar()
         enough = all(len(c.train_sizes) >= cfg.min_fit_points
                      for c in camps.values())
@@ -613,6 +773,8 @@ def select_architecture(
             break
         rounds += 1
 
+    for c in camps.values():
+        c._sync_fit()
     cstars = {n: camps[n].cstar_old if camps[n].cstar_old is not None
               else np.inf for n in names}
     winner = min(cstars, key=cstars.get)

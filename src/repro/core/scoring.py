@@ -183,6 +183,12 @@ class PoolScoringEngine:
             p_spec = NamedSharding(mesh, P())
             kwargs["in_shardings"] = (p_spec, xs_spec)
         self._score_all = jax.jit(self._score_padded, **kwargs)
+        # (n_mb, mb) pack buckets swept so far — the compile-cache key set,
+        # persisted in campaign checkpoints (cache_keys / warm) — and the
+        # warmed AOT executables dispatched in place of the jit wrapper
+        # (lower().compile() does not populate jit's dispatch cache)
+        self.pack_keys: set = set()
+        self._compiled: dict = {}
 
     # -- model plumbing ----------------------------------------------------
 
@@ -231,6 +237,7 @@ class PoolScoringEngine:
             # donation would otherwise invalidate the caller's own buffer
             # (asarray/reshape alias device arrays when no padding copies)
             x = jnp.copy(x)
+        self.pack_keys.add((n_mb, mb))
         return x.reshape((n_mb, mb) + x.shape[1:]), n
 
     # -- public API --------------------------------------------------------
@@ -243,13 +250,45 @@ class PoolScoringEngine:
         caller masks by its own valid count).  Shares the compile cache
         with :meth:`score`, and donates the page buffer where the backend
         supports donation."""
-        return self._score_all(params, xs)
+        self.pack_keys.add((int(xs.shape[0]), int(xs.shape[1])))
+        return self._run_packed(params, xs)
+
+    def cache_keys(self):
+        """Sorted (n_mb, mb) pack buckets this engine has compiled."""
+        return sorted(self.pack_keys)
+
+    def _run_packed(self, params, xs):
+        """Dispatch one packed page: the warmed AOT executable when the
+        bucket was prewarmed, the jit wrapper otherwise."""
+        exe = self._compiled.get((int(xs.shape[0]), int(xs.shape[1])))
+        return (exe or self._score_all)(params, xs)
+
+    def warm(self, params, keys) -> int:
+        """AOT-compile the packed scoring step for the given (n_mb, mb)
+        pack buckets (e.g. restored from a campaign checkpoint) without
+        scoring a row; the executables are kept and dispatched directly.
+        Feature classifiers only — token pools carry a sequence dim the
+        pack key does not determine."""
+        if self._batch_key != "features":
+            raise NotImplementedError(
+                "warm() supports feature-classifier engines")
+        count = 0
+        for n_mb, mb in keys:
+            key = (int(n_mb), int(mb))
+            if key in self._compiled:
+                continue
+            xs = jax.ShapeDtypeStruct(
+                key + (self.model.cfg.input_dim,), jnp.float32)
+            self._compiled[key] = self._score_all.lower(params, xs).compile()
+            self.pack_keys.add(key)
+            count += 1
+        return count
 
     def score(self, params, pool_x) -> Tuple[ScoreStats, jax.Array]:
         """Score the whole pool.  Returns device-resident ScoreStats and
         (N, D) last-hidden features, trimmed to the true pool size."""
         xs, n = self._pack(pool_x)
-        stats, feats = self._score_all(params, xs)
+        stats, feats = self._run_packed(params, xs)
         return (compat.tree_map(lambda a: a[:n], stats), feats[:n])
 
     def pool_features(self, params, pool_x) -> jax.Array:
@@ -277,7 +316,7 @@ class PoolScoringEngine:
         k = min(k, n)
         if k <= 0:
             return np.zeros((0,), np.int64)
-        stats, _ = self._score_all(params, xs)
+        stats, _ = self._run_packed(params, xs)
         scores = uncertainty_from_stats(stats, metric)
         valid = jnp.arange(scores.shape[0]) < n
         _, idx = jax.lax.top_k(jnp.where(valid, scores, -jnp.inf), k)

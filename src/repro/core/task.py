@@ -66,6 +66,10 @@ class LiveTask:
     c_u_nominal: float = 1e-4        # $/sample-iteration when not measuring
     score_microbatch: int = 2048     # pool-scoring engine microbatch
     sweep_page: int = 8192           # pool-sweep runtime page rows
+    fit_fused: bool = True           # fused-scan retrain engine (False ->
+                                     # the per-step host-loop oracle)
+    fit_resident: bool = False       # keep the labeled set device-resident,
+                                     # scatter in only newly bought labels
 
     def __post_init__(self):
         from repro.configs.base import ModelConfig, TrainConfig
@@ -85,15 +89,19 @@ class LiveTask:
                               schedule="constant",
                               weight_decay=1e-4, grad_clip=1.0)
         self._params = None
-        self._step_cache: Dict[int, object] = {}
         from repro.core.scoring import PoolScoringEngine, ScoringConfig
         from repro.serving.sweep import (EngineSweepAdapter, PoolSweepRunner,
                                          SweepConfig)
+        from repro.training.fit_device import FitConfig, FitEngine
         self._engine = PoolScoringEngine(
             self.model, ScoringConfig(microbatch=self.score_microbatch))
         self._sweep = PoolSweepRunner(
             EngineSweepAdapter(self._engine),
             SweepConfig(page_rows=self.sweep_page))
+        self._fit = FitEngine(self.model, self.tc,
+                              FitConfig(epochs=self.epochs,
+                                        batch_size=self.batch_size))
+        self._res_idx = np.zeros((0,), np.int64)  # resident-pool row ledger
 
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:
@@ -102,39 +110,73 @@ class LiveTask:
     # -- training ------------------------------------------------------------
     def train(self, idx: np.ndarray, labels: np.ndarray) -> float:
         """Re-train from scratch on (idx, labels) for ``epochs`` epochs
-        (fixed epochs => per-iteration cost proportional to |B|, Eqn. 4)."""
-        from repro.training.train_loop import init_train_state, make_train_step
+        (fixed epochs => per-iteration cost proportional to |B|, Eqn. 4).
 
+        Runs as ONE fused device program (``training.fit_device.FitEngine``:
+        epochs x steps in a single ``lax.scan``, shuffles from
+        ``jax.random.permutation`` on device, (n, batch) pow2-bucketed so
+        growing |B| reuses the compile cache).  ``fit_fused=False`` keeps
+        the per-step host loop — the exact-agreement oracle (identical
+        permutation sequence -> bit-identical params on a CPU host).  With
+        ``fit_resident`` the labeled set stays device-resident across MCAL
+        iterations and only newly bought labels are scattered in."""
         idx = np.asarray(idx, np.int64)
         n = len(idx)
-        bs = min(self.batch_size, n)
-        steps_per_epoch = max(n // bs, 1)
-
-        rng = np.random.default_rng(self.seed + n)
-        state = init_train_state(self.model, self.tc, jax.random.key(self.seed))
-        step = self._step_cache.get(bs)
-        if step is None:
-            step = make_train_step(self.model, self.tc, mesh=None)
-            self._step_cache[bs] = step
-
-        x = self.features[idx].astype(np.float32)
-        y = np.asarray(labels, np.int32)
+        rng = jax.random.key(self.seed)
         t0 = time.perf_counter()
-        for _ in range(self.epochs):
-            order = rng.permutation(n)
-            for s in range(steps_per_epoch):
-                sel = order[s * bs:(s + 1) * bs]
-                if len(sel) < bs:  # pad the ragged tail by wrapping
-                    sel = np.concatenate([sel, order[: bs - len(sel)]])
-                batch = {"features": jnp.asarray(x[sel]),
-                         "labels": jnp.asarray(y[sel])}
-                state, metrics = step(state, batch)
-        jax.block_until_ready(metrics["loss"])
+        if not self.fit_fused:
+            params, losses = self._fit.fit_reference(
+                rng, self.features[idx].astype(np.float32),
+                np.asarray(labels, np.int32))
+        elif self.fit_resident:
+            prev = len(self._res_idx)
+            if n < prev or not np.array_equal(idx[:prev], self._res_idx):
+                # not an append-only extension of the resident set: rebuild
+                self._fit.reset_resident()
+                prev = 0
+            if n > prev:
+                fresh = idx[prev:]
+                self._fit.extend_resident(
+                    self.features[fresh].astype(np.float32),
+                    np.asarray(labels, np.int32)[prev:])
+            self._res_idx = idx.copy()
+            params, losses = self._fit.fit_resident(rng)
+        else:
+            params, losses = self._fit.fit(
+                rng, self.features[idx].astype(np.float32),
+                np.asarray(labels, np.int32))
+        jax.block_until_ready(losses)
         wall = time.perf_counter() - t0
-        self._params = state["params"]
+        self._params = params
         if self.measured_cost:
             return wall / 3600.0 * self.price_per_hour
         return self.c_u_nominal * n
+
+    def train_cost(self, n: int) -> Optional[float]:
+        """The $ cost :meth:`train` will charge for an ``n``-row retrain
+        when it is known WITHOUT training (the deterministic nominal
+        c_u * |B| model) — None under ``measured_cost`` (wall-clock
+        pricing).  The campaign's async-fit path pays this at submit
+        time so the shared ledger is never stale while a retrain is in
+        flight."""
+        return None if self.measured_cost else self.c_u_nominal * n
+
+    def submit_train(self, idx: np.ndarray, labels: np.ndarray,
+                     then: Optional[callable] = None):
+        """Async retrain (``FitEngine.submit_fit`` worker): runs
+        :meth:`train` off-thread and returns a ``FitFuture`` of its $ cost
+        — or of ``(cost, then())`` when a ``then`` continuation is given
+        (the campaign chains its measurement sweep there, so it reads the
+        freshly trained params on the same worker and the retrain dispatch
+        overlaps the measurement's host-side paging)."""
+        idx = np.asarray(idx, np.int64).copy()
+        labels = np.asarray(labels).copy()
+
+        def job():
+            c = self.train(idx, labels)
+            return (c, then()) if then is not None else c
+
+        return self._fit.submit_call(job)
 
     # -- scoring ----------------------------------------------------------
     # Pool-scale passes (top-k M(.), k-center features, the L(.)/commit
@@ -187,13 +229,24 @@ class LiveTask:
             self._sweep.run(self._params, self._pool(idx), FeatureSink()),
             np.float32)
 
-    def machine_label_sweep(self, idx: np.ndarray, metric: str = "margin"):
+    def machine_label_sweep(self, idx: np.ndarray, metric: str = "margin",
+                            *, checkpoint=None, checkpoint_every: int = 0,
+                            on_checkpoint=None):
         """L(.)/commit fast path: one paged sweep over ``idx`` ->
         (rows most-confident-first, machine labels row-aligned with
-        ``idx``).  Only the rank field + top1 per row return to host."""
+        ``idx``).  Only the rank field + top1 per row return to host.
+
+        ``checkpoint`` resumes a previously cut ``SweepCheckpoint``
+        mid-pool (bit-identical to an uninterrupted sweep);
+        ``checkpoint_every``/``on_checkpoint`` cut a cursor every N pages
+        and hand it to the callback — the launcher persists it in its
+        ``--state`` file so a preempted commit sweep restarts mid-pool."""
         from repro.serving.sweep import RankTop1Sink
         order, top1 = self._sweep.run(self._params, self._pool(idx),
-                                      RankTop1Sink(metric))
+                                      RankTop1Sink(metric),
+                                      checkpoint=checkpoint,
+                                      checkpoint_every=checkpoint_every,
+                                      on_checkpoint=on_checkpoint)
         return order, top1
 
     def submit_candidates(self, metric: str, k: int, candidates: np.ndarray,
@@ -218,6 +271,24 @@ class LiveTask:
     def predict(self, idx: np.ndarray) -> np.ndarray:
         stats, _ = self._engine.score_host(self._params, self._pool(idx))
         return np.asarray(stats.top1, np.int64)
+
+    # -- compile-cache persistence ----------------------------------------
+    def pack_cache_keys(self) -> Dict:
+        """The pow2 pack-shape buckets both device engines have compiled
+        (scoring sweep pages + fused-fit programs) — JSON-embeddable in
+        campaign checkpoints so a resumed replay prewarms them instead of
+        recompiling mid-loop."""
+        return {"scoring": [list(k) for k in self._engine.cache_keys()],
+                "fit": [list(k) for k in self._fit.cache_keys()]}
+
+    def prewarm_caches(self, keys: Optional[Dict]):
+        """Rebuild both engines' compile caches from persisted pack keys
+        (requires a trained model for the scoring side)."""
+        if not keys:
+            return
+        self._fit.warm(keys.get("fit", ()))
+        if self._params is not None:
+            self._engine.warm(self._params, keys.get("scoring", ()))
 
     def eval_correct(self, idx: np.ndarray, labels: np.ndarray) -> np.ndarray:
         return self.predict(idx) == np.asarray(labels)

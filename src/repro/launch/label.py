@@ -8,13 +8,20 @@ Replay mode (paper-scale emulated learning curves):
     PYTHONPATH=src python -m repro.launch.label --dataset cifar10 \
         --arch resnet18 --service amazon
 
-Campaign state (ledger, pool bitmap, per-theta history) checkpoints to
---state so a preempted campaign resumes mid-loop.
+Campaign state (ledger, pool bitmap, per-theta history, fitted power
+laws, engine pack-shape cache keys) checkpoints to ``--state`` after
+every iteration, so a preempted campaign resumes mid-loop — and during
+the commit sweep a resumable ``SweepCheckpoint`` cursor is embedded
+every ``--sweep-ckpt-pages`` pages, so even a mid-pool L(.) sweep
+survives a restart.  ``--iters-per-run`` bounds how many iterations one
+invocation runs (preemptible-worker style): when the campaign is not
+done yet the invocation saves state and exits with a resumable report.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 
 # every selection-module metric plus the paper's random baseline
@@ -47,33 +54,134 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sweep-async", action="store_true",
                     help="overlap each iteration's M(.) sweep with the "
                          "host-side power-law fits + joint search")
+    ap.add_argument("--fit-fused", dest="fit_fused", action="store_true",
+                    default=True,
+                    help="fused-scan retrain engine: the whole fixed-epoch "
+                         "retrain as one device program (default)")
+    ap.add_argument("--no-fit-fused", dest="fit_fused", action="store_false",
+                    help="per-step host training loop (the exact-agreement "
+                         "oracle path)")
+    ap.add_argument("--fit-async", action="store_true",
+                    help="defer each retrain + its measurement sweep onto "
+                         "the fit-engine worker thread (overlaps the "
+                         "retrain dispatch; iteration records are "
+                         "identical to the synchronous campaign)")
+    ap.add_argument("--fit-resident", action="store_true",
+                    help="keep the labeled set device-resident across "
+                         "iterations; only newly bought labels upload")
+    ap.add_argument("--state", default="",
+                    help="campaign state file: saved every iteration (and "
+                         "every --sweep-ckpt-pages pages of the commit "
+                         "sweep); an existing file is resumed")
+    ap.add_argument("--sweep-ckpt-pages", type=int, default=0,
+                    help="cut a resumable commit-sweep cursor into --state "
+                         "every N pages (0 disables)")
+    ap.add_argument("--iters-per-run", type=int, default=0,
+                    help="run at most N iterations this invocation, then "
+                         "save --state and exit resumable (0 = run to "
+                         "completion)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     return ap
 
 
+def _save_state(path: str, campaign=None, cursor=None, campaign_blob=None):
+    """Atomic-ish state write: campaign loop state + optional mid-sweep
+    cursor (the cursor is only meaningful for the commit sweep cut against
+    the saved loop state).  Pass ``campaign_blob`` to reuse an already
+    serialized campaign dict — cursor cuts fire every few pages and the
+    loop state is frozen for the whole commit sweep, so re-serializing
+    the O(pool) label list per cut would dominate the sweep itself."""
+    blob = {"campaign": campaign_blob if campaign_blob is not None
+            else campaign.state_dict()}
+    if cursor is not None:
+        blob["sweep_cursor"] = cursor.to_json()
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(blob, f)
+    os.replace(tmp, path)
+
+
+def run_campaign(task, service, cfg, *, state_path: str = "",
+                 sweep_ckpt_pages: int = 0, iters_per_run: int = 0):
+    """Drive one campaign with optional ``--state`` fault tolerance.
+    Returns (MCALResult | None, campaign) — result is None when
+    ``iters_per_run`` preempted the loop before completion."""
+    from repro.core import MCALCampaign
+    from repro.serving.sweep import SweepCheckpoint
+
+    camp = MCALCampaign(task, service, cfg)
+    if state_path and os.path.exists(state_path):
+        with open(state_path) as f:
+            blob = json.load(f)
+        camp.load_state_dict(blob["campaign"])
+        if "sweep_cursor" in blob:
+            camp.resume_sweep_checkpoint = SweepCheckpoint.from_json(
+                blob["sweep_cursor"])
+    else:
+        camp.bootstrap()
+        if state_path:
+            _save_state(state_path, camp)
+
+    if state_path and sweep_ckpt_pages:
+        camp.sweep_checkpoint_every = sweep_ckpt_pages
+        frozen = {}   # campaign blob serialized once at the first cut
+
+        def save_cursor(ck):
+            if "blob" not in frozen:
+                frozen["blob"] = camp.state_dict()
+            _save_state(state_path, cursor=ck,
+                        campaign_blob=frozen["blob"])
+
+        camp.on_sweep_checkpoint = save_cursor
+
+    ran = 0
+    while not camp.done:
+        camp.iteration()
+        ran += 1
+        if state_path:
+            _save_state(state_path, camp)
+        if iters_per_run and ran >= iters_per_run and not camp.done:
+            return None, camp
+    res = camp.commit()
+    if state_path and os.path.exists(state_path):
+        os.remove(state_path)   # campaign complete: the state is spent
+    return res, camp
+
+
 def main():
     args = build_parser().parse_args()
 
-    from repro.core import (MCALConfig, SERVICES, LiveTask, run_mcal,
+    from repro.core import (MCALConfig, SERVICES, LiveTask,
                             make_emulated_task)
     from repro.data.synth import make_classification
 
     service = SERVICES[args.service]
     cfg = MCALConfig(eps_target=args.eps, metric=args.metric,
                      budget=args.budget, seed=args.seed,
-                     sweep_async=args.sweep_async)
+                     sweep_async=args.sweep_async,
+                     fit_async=args.fit_async)
     if args.live:
         x, y = make_classification(args.pool, num_classes=args.classes,
                                    difficulty=args.difficulty,
                                    seed=args.seed)
         task = LiveTask(features=x, groundtruth=y, num_classes=args.classes,
-                        seed=args.seed, sweep_page=args.sweep_page)
+                        seed=args.seed, sweep_page=args.sweep_page,
+                        fit_fused=args.fit_fused,
+                        fit_resident=args.fit_resident)
     else:
         task = make_emulated_task(args.dataset, args.arch, seed=args.seed,
                                   sweep_page=args.sweep_page)
 
-    res = run_mcal(task, service, cfg)
+    res, camp = run_campaign(task, service, cfg, state_path=args.state,
+                             sweep_ckpt_pages=args.sweep_ckpt_pages,
+                             iters_per_run=args.iters_per_run)
+    if res is None:
+        report = {"resumable": True, "state": args.state,
+                  "iterations": len(camp.history),
+                  "B_size": len(camp.pool.B_idx)}
+        print(json.dumps(report, indent=2))
+        return
     X = task.pool_size
     human_all = X * service.price_per_label
     report = {

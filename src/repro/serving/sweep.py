@@ -453,13 +453,36 @@ class PoolSweepRunner:
     # -- synchronous sweeps -------------------------------------------------
 
     def run(self, params, pool, sink, *,
-            checkpoint: Optional[SweepCheckpoint] = None):
+            checkpoint: Optional[SweepCheckpoint] = None,
+            checkpoint_every: int = 0,
+            on_checkpoint: Optional[Callable] = None):
         """Sweep the whole pool (resuming from ``checkpoint`` if given)
-        and return the sink's finalized deliverable."""
+        and return the sink's finalized deliverable.  With
+        ``checkpoint_every``/``on_checkpoint``, a resumable cursor is cut
+        every N pages and handed to the callback before sweeping on —
+        callers persist it so a preempted sweep restarts mid-pool.  The
+        live sink state is threaded through the cuts (serialization
+        happens only for the callback's cursor, never round-trips back),
+        and no cursor is cut after the final page (there is nothing left
+        to resume)."""
         n = self.adapter.length(pool)
+        n_pages = self.n_pages(n)
         start, state = self._restore(sink, n, checkpoint)
-        state = self._sweep(params, pool, sink, state, start,
-                            self.n_pages(n), n)
+        if checkpoint_every and on_checkpoint is not None:
+            page = start
+            while page < n_pages:
+                stop = min(page + checkpoint_every, n_pages)
+                state = self._sweep(params, pool, sink, state, page,
+                                    stop, n)
+                page = stop
+                if page < n_pages:
+                    on_checkpoint(SweepCheckpoint(
+                        next_page=page, n=n,
+                        page_rows=self.cfg.page_rows, sink_kind=sink.kind,
+                        sink_state=sink.serialize(state)))
+        else:
+            state = self._sweep(params, pool, sink, state, start,
+                                n_pages, n)
         return sink.finalize(state, n)
 
     def run_until(self, params, pool, sink, stop_page: int, *,

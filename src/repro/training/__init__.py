@@ -1,1 +1,3 @@
 from repro.training import optimizer, schedules, train_loop  # noqa: F401
+from repro.training.fit_device import (FitConfig, FitEngine,  # noqa: F401
+                                       FitFuture)

@@ -37,3 +37,94 @@ def test_launcher_sweep_flags():
     args = build_parser().parse_args(["--sweep-page", "4096",
                                       "--sweep-async"])
     assert args.sweep_page == 4096 and args.sweep_async
+
+
+def test_launcher_fit_flags():
+    args = build_parser().parse_args([])
+    assert args.fit_fused and not args.fit_async and not args.fit_resident
+    args = build_parser().parse_args(["--no-fit-fused"])
+    assert not args.fit_fused
+    args = build_parser().parse_args(["--fit-async", "--fit-resident"])
+    assert args.fit_async and args.fit_resident
+
+
+def test_launcher_state_flags():
+    args = build_parser().parse_args([])
+    assert args.state == "" and args.sweep_ckpt_pages == 0
+    assert args.iters_per_run == 0
+    args = build_parser().parse_args(
+        ["--state", "/tmp/s.json", "--sweep-ckpt-pages", "4",
+         "--iters-per-run", "2"])
+    assert args.state == "/tmp/s.json" and args.sweep_ckpt_pages == 4
+    assert args.iters_per_run == 2
+
+
+def test_run_campaign_state_file_preempt_and_resume(tmp_path):
+    """Launcher-level fault tolerance: a campaign preempted by
+    --iters-per-run resumes from its --state file and finishes with the
+    economics of an uninterrupted run; the state file is consumed on
+    completion."""
+    import os
+
+    import numpy as np
+    import pytest as _pytest
+
+    from repro.core import AMAZON, MCALConfig, make_emulated_task
+    from repro.launch.label import run_campaign
+
+    cfg = MCALConfig(seed=0)
+    state = str(tmp_path / "state.json")
+
+    def task():
+        return make_emulated_task("cifar10", "resnet18", seed=0,
+                                  pool_size=4000, sweep_page=512)
+
+    plain, _ = run_campaign(task(), AMAZON, cfg)
+
+    res, camp = run_campaign(task(), AMAZON, cfg, state_path=state,
+                             iters_per_run=2)
+    assert res is None and os.path.exists(state)   # preempted, resumable
+    hops = 1
+    while res is None:
+        res, camp = run_campaign(task(), AMAZON, cfg, state_path=state,
+                                 sweep_ckpt_pages=2, iters_per_run=2)
+        hops += 1
+        assert hops < 50
+    assert hops > 1                                # actually resumed
+    assert not os.path.exists(state)               # spent on completion
+    assert res.total_cost == _pytest.approx(plain.total_cost, rel=1e-9)
+    assert res.S_size == plain.S_size and res.B_size == plain.B_size
+    np.testing.assert_array_equal(res.labels, plain.labels)
+    # the full iteration trace survives the hops (history is persisted)
+    assert len(res.history) == len(plain.history)
+    assert [r.cstar for r in res.history] == \
+        [r.cstar for r in plain.history]
+    assert [r.B_size for r in res.history] == \
+        [r.B_size for r in plain.history]
+
+
+def test_run_campaign_resume_preserves_random_metric_stream(tmp_path):
+    """--metric random draws from the campaign RNG; the persisted
+    bit-generator state makes a preempted run's acquisitions identical
+    to an uninterrupted one."""
+    import numpy as np
+    import pytest as _pytest
+
+    from repro.core import AMAZON, MCALConfig, make_emulated_task
+    from repro.launch.label import run_campaign
+
+    cfg = MCALConfig(seed=0, metric="random", max_iters=8)
+    state = str(tmp_path / "state.json")
+
+    def task():
+        return make_emulated_task("cifar10", "resnet18", seed=0,
+                                  pool_size=4000, sweep_page=512)
+
+    plain, plain_camp = run_campaign(task(), AMAZON, cfg)
+    res = None
+    while res is None:
+        res, camp = run_campaign(task(), AMAZON, cfg, state_path=state,
+                                 iters_per_run=2)
+    np.testing.assert_array_equal(camp.pool.B_idx, plain_camp.pool.B_idx)
+    assert res.total_cost == _pytest.approx(plain.total_cost, rel=1e-9)
+    np.testing.assert_array_equal(res.labels, plain.labels)

@@ -185,3 +185,150 @@ def test_relaxed_eps_saves_more():
                    MCALConfig(seed=0, eps_target=0.10))
     assert t10.total_cost <= t5.total_cost * 1.02
     assert t10.measured_error <= 0.10 + 0.005
+
+
+def test_state_dict_persists_fitted_models_and_resumes_without_refit():
+    """Checkpoints carry the fitted per-theta power laws + the training
+    cost model; a resumed campaign's first search() consumes them from
+    the restored memo cache — zero refits — and they equal a fresh fit
+    of the same history."""
+    import repro.core.mcal as mcal_mod
+
+    ref = MCALCampaign(make_emulated_task("cifar10", "resnet18", seed=0),
+                       AMAZON, MCALConfig(seed=0))
+    ref.bootstrap()
+    for _ in range(3):
+        ref.iteration()
+    blob = json.loads(json.dumps(ref.state_dict()))  # strict-JSON trip
+    assert blob["fitted"] is not None
+    assert set(blob["fitted"]["laws"]) == {str(t) for t in ref.cfg.thetas}
+    assert blob["fitted"]["cost_model"]["c_u"] > 0
+
+    resumed = MCALCampaign(make_emulated_task("cifar10", "resnet18",
+                                              seed=0), AMAZON,
+                           MCALConfig(seed=0))
+    resumed.load_state_dict(blob)
+    calls = []
+    orig = mcal_mod.fit_power_law
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    mcal_mod.fit_power_law = counting
+    try:
+        res_laws, res_cm = resumed._fit_models()
+    finally:
+        mcal_mod.fit_power_law = orig
+    assert not calls, "resumed campaign refit its power laws"
+    fresh_laws, fresh_cm = ref._fit_models()
+    assert res_cm.c_u == pytest.approx(fresh_cm.c_u)
+    for t in ref.cfg.thetas:
+        assert res_laws[t].alpha == pytest.approx(fresh_laws[t].alpha)
+        assert res_laws[t].gamma == pytest.approx(fresh_laws[t].gamma)
+        assert (res_laws[t].k == pytest.approx(fresh_laws[t].k)
+                or (np.isinf(res_laws[t].k) and np.isinf(fresh_laws[t].k)))
+    # the cache invalidates as soon as the history grows
+    resumed.iteration()           # acquires + measures -> history grows
+    resumed._fit_models()         # next consumer refits at the new key
+    assert resumed._fit_models_cache[0][0] == len(resumed.train_sizes)
+
+
+def test_state_dict_persists_engine_pack_keys():
+    """Live-task checkpoints round-trip the scoring + fit engines'
+    pack-shape compile-cache keys, and load_state_dict prewarms them."""
+    from repro.core import LiveTask
+    from repro.data.synth import make_classification
+
+    x, y = make_classification(600, num_classes=10, dim=16,
+                               difficulty=0.3, seed=1)
+
+    def fresh():
+        task = LiveTask(features=x, groundtruth=y, num_classes=10,
+                        epochs=2, seed=1, sweep_page=256,
+                        score_microbatch=256)
+        return MCALCampaign(task, AMAZON,
+                            MCALConfig(seed=1, delta0_frac=0.02))
+
+    ref = fresh()
+    ref.bootstrap()
+    ref.iteration()
+    blob = json.loads(json.dumps(ref.state_dict()))
+    keys = blob["pack_keys"]
+    assert keys and keys["scoring"] and keys["fit"]
+
+    resumed = fresh()
+    resumed.load_state_dict(blob)
+    got = resumed.task.pack_cache_keys()
+    assert {tuple(k) for k in keys["fit"]} <= \
+        {tuple(k) for k in got["fit"]}
+    assert {tuple(k) for k in keys["scoring"]} <= \
+        {tuple(k) for k in got["scoring"]}
+
+
+def test_commit_sweep_cursor_resumes_identically():
+    """A commit L(.) sweep preempted mid-pool resumes from its
+    SweepCheckpoint bit-identically: same machine labels, same cost."""
+    from repro.core import LiveTask
+    from repro.data.synth import make_classification
+    from repro.serving.sweep import SweepCheckpoint
+
+    x, y = make_classification(900, num_classes=10, dim=16,
+                               difficulty=0.25, seed=2)
+
+    def finished_campaign():
+        task = LiveTask(features=x, groundtruth=y, num_classes=10,
+                        epochs=3, seed=2, sweep_page=128,
+                        score_microbatch=128)
+        camp = MCALCampaign(task, AMAZON,
+                            MCALConfig(seed=2, max_iters=3,
+                                       delta0_frac=0.02))
+        camp.bootstrap()
+        while not camp.done:
+            camp.iteration()
+        return camp
+
+    plain = finished_campaign().commit()
+
+    # cut cursors every page, "preempt" after the second cut, resume from
+    # a JSON round-trip of the captured cursor
+    camp = finished_campaign()
+    cuts = []
+
+    class Preempted(Exception):
+        pass
+
+    def capture(ck):
+        cuts.append(ck.to_json())
+        if len(cuts) == 2:
+            raise Preempted
+
+    camp.sweep_checkpoint_every = 1
+    camp.on_sweep_checkpoint = capture
+    with pytest.raises(Preempted):
+        camp.commit()
+
+    resumed = finished_campaign()
+    resumed.resume_sweep_checkpoint = SweepCheckpoint.from_json(cuts[-1])
+    res = resumed.commit()
+    np.testing.assert_array_equal(res.labels, plain.labels)
+    np.testing.assert_array_equal(res.machine_mask, plain.machine_mask)
+    assert res.total_cost == pytest.approx(plain.total_cost, rel=1e-12)
+
+
+def test_emulated_commit_sweep_cursor_resumes_identically():
+    """The emulated (replay) task honours the same cursor kwargs."""
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=4000, sweep_page=256)
+    idx = np.arange(1000, 3500)
+    order_full, top1_full = task.machine_label_sweep(idx)
+
+    cuts = []
+    task.machine_label_sweep(idx, checkpoint_every=3,
+                             on_checkpoint=lambda ck: cuts.append(ck))
+    assert len(cuts) >= 2
+    from repro.serving.sweep import SweepCheckpoint
+    mid = SweepCheckpoint.from_json(cuts[1].to_json())
+    order_res, top1_res = task.machine_label_sweep(idx, checkpoint=mid)
+    np.testing.assert_array_equal(order_res, order_full)
+    np.testing.assert_array_equal(top1_res, top1_full)
