@@ -1,0 +1,106 @@
+"""Device Dawid-Skene EM vs the host NumPy reference loop.
+
+Every human-label purchase in a noisy-oracle campaign aggregates an
+(items, workers) vote matrix, and adaptive-repeats policies re-aggregate
+once per top-up round — at paper scale (50k-item acquisition batches,
+5-worker pools) the aggregation is a real hot path.  Two implementations
+of one EM:
+
+  ds_host     ``aggregate.dawid_skene_host``: the float64 NumPy
+              reference (per-worker python loop per EM iteration) — the
+              exact-agreement oracle the device engine is validated
+              against;
+  ds_device   ``VoteAggregator.dawid_skene``: the whole EM as ONE
+              jit-compiled program (``lax.fori_loop`` over M-then-E
+              iterations, items padded through ``scoring.pack_shape``'s
+              pow2 bucketing).
+
+``--enforce`` (the CI gate) asserts IDENTICAL argmax labels + atol-
+bounded posteriors AND >= 2x for the device program at the gate shape
+(50k x 5).  Majority vote is reported alongside (exact agreement
+asserted) but not gated — it is too cheap on both sides to gate
+meaningfully.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed_best
+
+
+def _vote_matrix(n: int, workers: int, classes: int, repeats: int,
+                 seed: int = 0):
+    from repro.annotation import make_annotator_pool
+
+    pool = make_annotator_pool(workers, classes, noise=0.25,
+                               spammer_frac=0.2, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    gt = rng.integers(0, classes, n)
+    # the service's own worker schedule: the benchmark measures the
+    # exact matrices campaigns aggregate
+    return pool.vote_matrix(np.arange(n), gt, repeats)
+
+
+def run_ds(grid=((5_000, 5, 10, 3), (50_000, 5, 10, 3)),
+           gate_shape=(50_000, 5), enforce: bool = False) -> list:
+    from repro.annotation import (VoteAggregator, dawid_skene_host,
+                                  majority_vote_host)
+
+    rows, gate_speedup = [], None
+    for n, workers, classes, repeats in grid:
+        votes = _vote_matrix(n, workers, classes, repeats)
+        agg = VoteAggregator(classes)
+
+        dev, us_dev = timed_best(lambda: agg.dawid_skene(votes), repeat=3)
+        ref, us_host = timed_best(
+            lambda: dawid_skene_host(votes, classes), repeat=2)
+        # agreement asserted on every shape, not just the gate
+        assert np.array_equal(ref.labels, dev.labels), \
+            f"device EM argmax diverged from the host EM at (n={n})"
+        assert np.max(np.abs(ref.posterior - dev.posterior)) < 1e-3, \
+            f"device EM posteriors off the host EM at (n={n})"
+        speedup = us_host / us_dev
+        rows.append(Row(
+            f"ds_em_{n}x{workers}_c{classes}", us_dev,
+            f"speedup={speedup:.2f}x_vs_hostloop;host_us={us_host:.0f};"
+            f"argmax_exact=True",
+            meta={"items": n, "workers": workers, "classes": classes,
+                  "repeats": repeats, "speedup": round(speedup, 3)}))
+        if (n, workers) == gate_shape:
+            gate_speedup = speedup
+
+        lm_d, _ = agg.majority(votes)
+        lm_h, _ = majority_vote_host(votes, classes)
+        assert np.array_equal(lm_d, lm_h), \
+            f"device majority diverged from host at (n={n})"
+
+    if enforce:
+        assert gate_speedup is not None, \
+            f"gate shape {gate_shape} missing from the grid"
+        assert gate_speedup >= 2.0, \
+            f"device Dawid-Skene only {gate_speedup:.2f}x over the host " \
+            f"reference at {gate_shape}"
+    return rows
+
+
+def run_smoke() -> list:
+    """CI smoke: a small warm-up shape plus the acceptance gate shape
+    (50k items x 5 workers), agreement + the >= 2x floor enforced."""
+    return run_ds(enforce=True)
+
+
+def run() -> list:
+    return run_ds(
+        grid=((5_000, 5, 10, 3), (50_000, 5, 10, 3), (50_000, 9, 100, 5)),
+        enforce=True)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--enforce", action="store_true",
+                    help="assert the >= 2x speedup floor (the CI gate)")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for r in (run_smoke() if args.smoke else run_ds(enforce=args.enforce)):
+        print(r.csv())

@@ -14,13 +14,14 @@
   bench_kernels            margin_head scoring structure
   bench_sweep              streaming pool-sweep runtime (>= 2x gate)
   bench_fit                fused retrain engine (>= 2x gate, exact params)
+  bench_annotation         device Dawid-Skene EM (>= 2x gate, exact argmax)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
 CI smoke: PYTHONPATH=src python -m benchmarks.run --smoke
-          (small-shape fit + sweep + scoring + k-center engine legs,
-          speedup gates enforced — the CI matrix runs this on both jax
-          legs)
+          (small-shape fit + sweep + scoring + k-center + annotation
+          engine legs, speedup gates enforced — the CI matrix runs this
+          on both jax legs)
 
 Every invocation additionally writes a machine-readable
 ``BENCH_<run>.json`` (``--json`` overrides the path, ``--run-id`` the
@@ -53,6 +54,7 @@ MODULES = (
     "bench_kernels",
     "bench_sweep",
     "bench_fit",
+    "bench_annotation",
 )
 
 
@@ -81,7 +83,8 @@ def run_smoke():
     """The CI smoke leg: small-shape fit-engine + sweep-runtime + engine
     benchmarks with their speedup gates ENFORCED (a gate miss fails the
     job).  Returns (status, rows, errors)."""
-    from benchmarks import bench_fit, bench_selection, bench_sweep
+    from benchmarks import (bench_annotation, bench_fit, bench_selection,
+                            bench_sweep)
 
     print("name,us_per_call,derived")
     status, rows, errors = 0, [], []
@@ -92,6 +95,7 @@ def run_smoke():
          lambda: bench_selection.run_scoring(enforce=True)),
         ("bench_selection[kcenter]",
          lambda: bench_selection.run_kcenter(enforce=True)),
+        ("bench_annotation[smoke]", bench_annotation.run_smoke),
     ):
         try:
             for row in fn():
@@ -109,9 +113,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: fit + sweep + scoring + k-center "
-                         "engine legs at small shapes, speedup gates "
-                         "enforced")
+                    help="CI smoke: fit + sweep + scoring + k-center + "
+                         "annotation engine legs at small shapes, "
+                         "speedup gates enforced")
     ap.add_argument("--run-id", default="",
                     help="run name for the BENCH_<run>.json record "
                          "(default: the mode + jax version)")

@@ -1,41 +1,82 @@
 """End-to-end live labeling campaign — the paper's system, for real.
 
     PYTHONPATH=src python examples/label_dataset.py
+    PYTHONPATH=src python examples/label_dataset.py --noisy
 
 Everything is live: a JAX MLP classifier is (re)trained by the framework's
 own train loop on every MCAL iteration, the pool is scored with the
-margin head, human labels are simulated as ground truth and charged to the
-ledger, and the final hybrid labeling is validated against the oracle.
-Takes a few minutes on CPU (dozens of real training runs).
+margin head, human labels are charged to the ledger, and the final hybrid
+labeling is validated against the oracle.  Takes a few minutes on CPU
+(dozens of real training runs).
+
+Default mode keeps the paper's assumption (human labels are perfect and
+cost one request each).  ``--noisy`` replaces that oracle with the
+annotation-service runtime: a seeded pool of imperfect annotators
+(including a spammer), Dawid-Skene EM aggregation on device, an
+adaptive-repeats policy (extra votes only for items whose aggregated
+posterior is still unsure — Liao et al.'s good practice), every vote
+charged at the service rate, and the campaign folding the residual
+aggregated-label error into its accuracy target.
 """
+import sys
+
 import numpy as np
 
 from repro.core import AMAZON, LiveTask, MCALConfig, run_mcal
 from repro.data.synth import make_classification
 
+NOISY = "--noisy" in sys.argv
 POOL, CLASSES, DIM = 6_000, 10, 32
 
 print(f"generating a {POOL:,}-sample / {CLASSES}-class pool "
       f"(25% hard tail) ...")
 x, y = make_classification(POOL, num_classes=CLASSES, dim=DIM,
                            difficulty=0.3, hard_frac=0.25, seed=0)
+
+annotation = None
+eps_target = 0.05
+if NOISY:
+    from repro.annotation import make_annotation_service
+    annotation = make_annotation_service(
+        CLASSES, n_workers=5, noise=0.15, spammer_frac=0.2,
+        repeats=2, max_repeats=4, adaptive=True, confidence=0.9,
+        aggregator="ds", pricing=AMAZON, seed=0)
+    eps_target = 0.15     # leave budget for the annotators' residual
+    q = annotation.calibrate()   # measured on a synthetic seeded batch
+    print(f"noisy annotation service: 5 workers (1 spammer), "
+          f"adaptive 2-4 votes/label, Dawid-Skene aggregation")
+    print(f"calibrated label quality: residual error "
+          f"~{q.residual_error:.1%}, ~{q.avg_repeats:.2f} votes/label")
+
 task = LiveTask(features=x, groundtruth=y, num_classes=CLASSES,
-                hidden=64, depth=2, epochs=30, c_u_nominal=2e-4, seed=0)
+                hidden=64, depth=2, epochs=30, c_u_nominal=2e-4, seed=0,
+                annotation=annotation)
 
 print("running MCAL (real training per iteration) ...")
-result = run_mcal(task, AMAZON,
-                  MCALConfig(eps_target=0.05, delta0_frac=0.02,
-                             max_iters=25, seed=0))
+cfg = MCALConfig(eps_target=eps_target, delta0_frac=0.02, max_iters=25,
+                 seed=0, label_quality=q if annotation else None)
+result = run_mcal(task, AMAZON, cfg)
 
-human_only = POOL * AMAZON.price_per_label
+human_all = POOL * AMAZON.price_per_label
+bound = eps_target
+if NOISY:
+    human_all *= cfg.label_quality.avg_repeats
+    bound = eps_target + cfg.label_quality.residual_error
 print(f"\ndecision       : {result.decision}")
 print(f"trained on     : {result.B_size:,} human labels "
       f"({result.B_size / POOL:.1%})")
 print(f"machine-labeled: {result.S_size:,} ({result.S_size / POOL:.1%}) "
       f"at theta={result.theta_final:.2f}")
-print(f"measured error : {result.measured_error:.2%} (bound 5%)")
+print(f"measured error : {result.measured_error:.2%} "
+      f"(achievable bound {bound:.0%})")
 print(f"cost           : ${result.total_cost:.2f} "
-      f"(human-only ${human_only:.0f}; "
-      f"{1 - result.total_cost / human_only:.1%} saved)")
+      f"(human-only ${human_all:.0f}; "
+      f"{1 - result.total_cost / human_all:.1%} saved)")
 print(f"ledger         : {result.ledger}")
-assert result.measured_error <= 0.06, "error bound violated!"
+if NOISY:
+    print(f"annotation     : {annotation.votes_bought:,} votes for "
+          f"{result.ledger['human_labels']:,} labels "
+          f"(avg {annotation.avg_repeats():.2f}/label); "
+          f"worker accuracy "
+          f"{np.round(annotation.worker_accuracy(), 2).tolist()}")
+assert result.measured_error <= bound + 0.01, "error bound violated!"

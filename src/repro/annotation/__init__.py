@@ -1,0 +1,17 @@
+"""Annotation-service runtime: the human side of MCAL, made realistic.
+
+    AnnotatorPool / AnnotatorConfig    seeded noisy worker pools
+    VoteAggregator                     device majority + Dawid-Skene EM
+    majority_vote_host / dawid_skene_host   the NumPy reference oracles
+    AnnotationService / RepeatPolicy   async request broker + budget ledger
+    make_annotation_service            one-call construction
+"""
+from repro.annotation.aggregate import (AggregateConfig, DSResult,
+                                        VoteAggregator, dawid_skene_host,
+                                        majority_vote_host,
+                                        vote_counts_host)
+from repro.annotation.oracle import (AnnotatorConfig, AnnotatorPool,
+                                     make_annotator_pool)
+from repro.annotation.service import (AGGREGATORS, AnnotationService,
+                                      BudgetExceeded, RepeatPolicy,
+                                      make_annotation_service)

@@ -1,0 +1,274 @@
+"""Device-resident vote aggregation: majority vote + Dawid-Skene EM.
+
+The annotation service answers every label request with a column of votes
+per worker — an ``(items, workers)`` int matrix with ``-1`` where a worker
+was not asked.  Turning votes into labels is the aggregation hot path
+(every human-label purchase runs it, adaptive-repeats policies run it
+once per top-up round), so it follows the same engine convention as
+scoring / selection / fit:
+
+* :class:`VoteAggregator` runs aggregation as jit-compiled device
+  programs — one-hot vote counting + first-index ``argmax`` for majority,
+  a ``lax.fori_loop`` EM (M-step then E-step per iteration, all items ×
+  workers × classes batched as dense einsums) for Dawid-Skene;
+* the item dimension is padded through ``scoring.pack_shape``'s pow2
+  bucketing (padded rows carry no votes and are masked out of the prior /
+  confusion sums), so growing request batches across MCAL iterations
+  reuse O(log N) compiled programs (``cache_keys()`` mirrors the other
+  engines' checkpoint-persistable compile-cache convention);
+* the host NumPy references (:func:`majority_vote_host`,
+  :func:`dawid_skene_host`) keep the natural per-worker loop shape — the
+  oracles the device programs are validated against and the baseline
+  ``benchmarks/bench_annotation.py`` enforces the >= 2x gate over.
+
+Oracle-test contract (tests/test_annotation.py)
+-----------------------------------------------
+
+Majority vote must agree EXACTLY with the host reference — vote counts
+are small integers, and both sides tie-break by FIRST class index
+(``argmax`` returns the first maximum on host and device alike).
+Dawid-Skene posteriors are float (host float64 vs device float32), so the
+contract is atol-bounded posteriors with IDENTICAL argmax labels across
+seeded (items, workers, classes, repeats, ragged-batch) grids — sound
+because the EM smoothing keeps every confusion entry strictly positive
+and the seeded pools keep worker confusions distinct, so posterior
+argmaxes are decided by margins far above float32 resolution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import pack_shape
+
+
+# ---------------------------------------------------------------------------
+# host references (the oracles)
+# ---------------------------------------------------------------------------
+
+
+def vote_counts_host(votes: np.ndarray, num_classes: int) -> np.ndarray:
+    """(N, C) per-class vote counts; ``votes`` is (N, W) with -1 = no vote."""
+    votes = np.asarray(votes, np.int64)
+    N, W = votes.shape
+    counts = np.zeros((N, num_classes), np.int64)
+    for w in range(W):
+        col = votes[:, w]
+        m = col >= 0
+        np.add.at(counts, (np.nonzero(m)[0], col[m]), 1)
+    return counts
+
+
+def majority_vote_host(votes: np.ndarray, num_classes: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Majority vote with FIRST-class-index tie-break.  Returns
+    ``(labels, confidence)`` where confidence = top count / total votes
+    (0 for rows with no votes, labeled class 0 by the same convention
+    the device program pads with)."""
+    counts = vote_counts_host(votes, num_classes)
+    labels = np.argmax(counts, axis=1).astype(np.int64)
+    total = counts.sum(axis=1)
+    top = counts[np.arange(len(counts)), labels]
+    conf = np.divide(top, np.maximum(total, 1), dtype=np.float64)
+    return labels, conf
+
+
+@dataclasses.dataclass
+class DSResult:
+    """Dawid-Skene deliverable: per-item posteriors + aggregated labels +
+    the estimated per-worker confusion stack and class prior."""
+
+    posterior: np.ndarray    # (N, C)
+    labels: np.ndarray       # (N,) argmax posterior
+    confidence: np.ndarray   # (N,) max posterior
+    confusion: np.ndarray    # (W, C, C) estimated P(vote=l | true=c)
+    prior: np.ndarray        # (C,)
+
+
+def dawid_skene_host(votes: np.ndarray, num_classes: int, *,
+                     em_iters: int = 12, smoothing: float = 0.01
+                     ) -> DSResult:
+    """The NumPy reference EM (float64, per-worker python loop — the seed
+    host-loop shape every engine keeps as its oracle).  Initialized from
+    soft majority counts; each iteration runs the M-step (class prior +
+    per-worker confusion from the current posteriors, Laplace-smoothed)
+    then the E-step (log-posterior accumulation over workers)."""
+    votes = np.asarray(votes, np.int64)
+    N, W = votes.shape
+    C = num_classes
+    mask = votes >= 0
+    v = np.where(mask, votes, 0)
+    counts = vote_counts_host(votes, C).astype(np.float64)
+    post = (counts + 1.0 / C) / (counts.sum(1, keepdims=True) + 1.0)
+    onehot = np.zeros((N, W, C), np.float64)
+    for w in range(W):
+        onehot[np.arange(N), w, v[:, w]] = mask[:, w]
+    for _ in range(max(em_iters, 1)):
+        prior = post.mean(axis=0)
+        conf = np.full((W, C, C), smoothing, np.float64)
+        for w in range(W):
+            conf[w] += post.T @ onehot[:, w, :]          # (C, C)
+        conf /= conf.sum(axis=2, keepdims=True)
+        logp = np.log(prior)[None, :]
+        logp = np.repeat(logp, N, axis=0)
+        for w in range(W):
+            lw = np.log(conf[w][:, v[:, w]]).T            # (N, C)
+            logp = logp + np.where(mask[:, w][:, None], lw, 0.0)
+        logp -= logp.max(axis=1, keepdims=True)
+        post = np.exp(logp)
+        post /= post.sum(axis=1, keepdims=True)
+    labels = np.argmax(post, axis=1).astype(np.int64)
+    return DSResult(posterior=post, labels=labels,
+                    confidence=post.max(axis=1),
+                    confusion=conf, prior=prior)
+
+
+# ---------------------------------------------------------------------------
+# the device engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateConfig:
+    em_iters: int = 12
+    smoothing: float = 0.01
+    microbatch: int = 1024   # pack_shape bucketing granularity for the
+                             # item dimension (pow2 compile-cache reuse)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def _majority_device(votes, num_classes: int):
+    """(Npad, W) -> (labels, confidence): one-hot counts + first-index
+    argmax (``jnp.argmax`` prefers the first maximum, matching the host
+    oracle's tie-break exactly — counts are exact small integers)."""
+    mask = votes >= 0
+    onehot = jax.nn.one_hot(jnp.where(mask, votes, 0), num_classes,
+                            dtype=jnp.int32) * mask[..., None]
+    counts = onehot.sum(axis=1)                       # (Npad, C)
+    labels = jnp.argmax(counts, axis=1)
+    total = jnp.maximum(counts.sum(axis=1), 1)
+    top = jnp.take_along_axis(counts, labels[:, None], axis=1)[:, 0]
+    return labels, top.astype(jnp.float32) / total.astype(jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_classes", "em_iters", "smoothing"))
+def _dawid_skene_device(votes, n, num_classes: int, em_iters: int,
+                        smoothing: float):
+    """The fused EM: same M-then-E iteration as the host oracle, items
+    padded (rows >= n carry no votes and are masked out of the prior),
+    ``em_iters`` fixed iterations in one ``lax.fori_loop``."""
+    Npad, W = votes.shape
+    C = num_classes
+    mask = (votes >= 0).astype(jnp.float32)           # (Npad, W)
+    v = jnp.where(votes >= 0, votes, 0)
+    onehot = jax.nn.one_hot(v, C, dtype=jnp.float32) * mask[..., None]
+    # flattened (Npad, W*C) vote indicator: both EM contractions become
+    # plain gemms against it — the per-(item, worker) gather/einsum
+    # formulations ran at host-loop speed on XLA:CPU and lost the
+    # benchmark gate; the only non-gemm work left per iteration is
+    # O(W * C^2) reshapes of the confusion stack
+    onehot2 = onehot.reshape(Npad, W * C)
+    row_valid = (jnp.arange(Npad) < n).astype(jnp.float32)
+    counts = onehot.sum(axis=1)                       # (Npad, C)
+    post = (counts + 1.0 / C) / (counts.sum(1, keepdims=True) + 1.0)
+
+    def one_iter(_, carry):
+        post, _conf, _prior = carry
+        pv = post * row_valid[:, None]
+        prior = pv.sum(axis=0) / jnp.maximum(n, 1)
+        # M-step: conf[w, c, l] = smoothing + sum_i pv[i, c] onehot[i, w, l]
+        num = pv.T @ onehot2                          # (C, W*C) gemm
+        conf = smoothing + num.reshape(C, W, C).transpose(1, 0, 2)
+        conf = conf / conf.sum(axis=2, keepdims=True)
+        # E-step: sum_w log conf[w, c, v_iw] = <onehot2, log conf> (gemm)
+        flat = jnp.log(conf).transpose(0, 2, 1).reshape(W * C, C)
+        logp = jnp.log(prior)[None, :] + onehot2 @ flat
+        logp = logp - logp.max(axis=1, keepdims=True)
+        post = jnp.exp(logp)
+        post = post / post.sum(axis=1, keepdims=True)
+        return post, conf, prior
+
+    conf0 = jnp.full((W, C, C), 1.0 / C, jnp.float32)
+    prior0 = jnp.full((C,), 1.0 / C, jnp.float32)
+    post, conf, prior = jax.lax.fori_loop(
+        0, max(em_iters, 1), one_iter, (post, conf0, prior0))
+    return post, conf, prior
+
+
+class VoteAggregator:
+    """Device-resident aggregation engine for one ``num_classes``.
+
+    ``majority(votes)`` / ``dawid_skene(votes)`` consume a host (N, W)
+    vote matrix, pad the item dimension through ``scoring.pack_shape``'s
+    pow2 bucketing (padding rows hold -1: no votes), run the jit-compiled
+    program and trim back to N.  The (n_mb, mb) buckets swept so far are
+    the compile-cache key set (``cache_keys()``), matching the other
+    engines' checkpoint convention.
+    """
+
+    def __init__(self, num_classes: int,
+                 cfg: AggregateConfig = AggregateConfig()):
+        assert num_classes >= 2
+        self.num_classes = num_classes
+        self.cfg = cfg
+        self.pack_keys: set = set()
+
+    # -- packing -----------------------------------------------------------
+    def _pad(self, votes) -> Tuple[jax.Array, int]:
+        votes = np.asarray(votes, np.int32)
+        assert votes.ndim == 2, "votes must be (items, workers)"
+        n = votes.shape[0]
+        n_mb, mb = pack_shape(n, self.cfg.microbatch)
+        self.pack_keys.add((n_mb, mb))
+        pad = n_mb * mb - n
+        if pad:
+            votes = np.concatenate(
+                [votes, np.full((pad, votes.shape[1]), -1, np.int32)])
+        return jnp.asarray(votes), n
+
+    def cache_keys(self) -> List[Tuple[int, int]]:
+        """Sorted (n_mb, mb) pack buckets aggregated so far."""
+        return sorted(self.pack_keys)
+
+    # -- public API --------------------------------------------------------
+    def majority(self, votes) -> Tuple[np.ndarray, np.ndarray]:
+        """Device majority vote -> host ``(labels, confidence)``; exact
+        twin of :func:`majority_vote_host` including the tie-break."""
+        vd, n = self._pad(votes)
+        labels, conf = _majority_device(vd, self.num_classes)
+        return (np.asarray(labels[:n], np.int64),
+                np.asarray(conf[:n], np.float64))
+
+    def dawid_skene(self, votes) -> DSResult:
+        """Device Dawid-Skene EM -> host :class:`DSResult`; atol-twin of
+        :func:`dawid_skene_host` with identical argmax labels."""
+        vd, n = self._pad(votes)
+        post, conf, prior = _dawid_skene_device(
+            vd, jnp.int32(n), self.num_classes, self.cfg.em_iters,
+            float(self.cfg.smoothing))
+        post = np.asarray(post[:n], np.float64)
+        return DSResult(
+            posterior=post,
+            labels=np.argmax(post, axis=1).astype(np.int64),
+            confidence=post.max(axis=1) if n else np.zeros((0,)),
+            confusion=np.asarray(conf, np.float64),
+            prior=np.asarray(prior, np.float64))
+
+    def aggregate(self, votes, method: str = "majority"
+                  ) -> Tuple[np.ndarray, np.ndarray, Optional[DSResult]]:
+        """One entry point for the service: ``(labels, confidence,
+        ds_result-or-None)`` under either aggregation method."""
+        if method == "majority":
+            labels, conf = self.majority(votes)
+            return labels, conf, None
+        if method == "ds":
+            res = self.dawid_skene(votes)
+            return res.labels, res.confidence, res
+        raise ValueError(f"unknown aggregation method {method!r}")

@@ -11,7 +11,7 @@ Public API:
     k_center_greedy_device            device-resident k-center M(.) engine
 """
 from repro.core.cost import (AMAZON, SATYAM, SERVICES, CostLedger,
-                             LabelingService, TrainCostModel)
+                             LabelQuality, LabelingService, TrainCostModel)
 from repro.core.emulator import EmulatedTask, make_emulated_task
 from repro.core.mcal import (MCALCampaign, MCALConfig, MCALResult,
                              SharedPool, run_mcal, select_architecture)

@@ -15,8 +15,23 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import mcal
 from repro.core import selection as sel
 from repro.core.cost import CostLedger, LabelingService
+
+
+def _buy(task, ledger: CostLedger, service: LabelingService,
+         idx: np.ndarray) -> np.ndarray:
+    """Purchase labels for ``idx`` with the same repeats-inclusive
+    charging convention as ``SharedPool.buy_labels`` — baselines must
+    price noisy-annotation votes like the campaigns they are compared
+    against, or the savings comparison is skewed in their favor."""
+    ann = getattr(task, "annotation", None)
+    v0 = ann.votes_bought if ann is not None else 0
+    labels = task.human_label(idx)
+    votes = (ann.votes_bought - v0) if ann is not None else len(idx)
+    ledger.pay_human(len(idx), service, votes=votes)
+    return labels
 
 
 @dataclasses.dataclass
@@ -41,8 +56,7 @@ def run_naive_al(task, service: LabelingService, delta_frac: float,
 
     T_size = max(int(round(test_frac * X)), 16)
     T_idx = rng.choice(X, T_size, replace=False)
-    T_labels = task.human_label(T_idx)
-    ledger.pay_human(T_size, service)
+    T_labels = _buy(task, ledger, service, T_idx)
 
     in_T = np.zeros(X, bool)
     in_T[T_idx] = True
@@ -54,8 +68,7 @@ def run_naive_al(task, service: LabelingService, delta_frac: float,
 
     b0 = rng.choice(np.nonzero(~in_T)[0], delta, replace=False)
     in_B[b0] = True
-    labels[b0] = task.human_label(b0)
-    ledger.pay_human(len(b0), service)
+    labels[b0] = _buy(task, ledger, service, b0)
 
     it = 0
     met = False
@@ -76,8 +89,7 @@ def run_naive_al(task, service: LabelingService, delta_frac: float,
         pick = sel.select_for_training(metric, delta, stats=stats,
                                        features=feats, candidates=remaining,
                                        rng=rng)
-        labels[pick] = task.human_label(pick)
-        ledger.pay_human(len(pick), service)
+        labels[pick] = _buy(task, ledger, service, pick)
         in_B[pick] = True
 
     remaining = np.nonzero(~in_T & ~in_B)[0]
@@ -86,10 +98,9 @@ def run_naive_al(task, service: LabelingService, delta_frac: float,
         S = len(remaining)
     else:  # constraint never met: humans finish the job
         if len(remaining):
-            labels[remaining] = task.human_label(remaining)
-            ledger.pay_human(len(remaining), service)
+            labels[remaining] = _buy(task, ledger, service, remaining)
         S = 0
-    gt = task.human_label(np.arange(X))
+    gt = mcal.oracle_labels(task, np.arange(X))  # evaluation only
     return ALResult(
         cost=ledger.total, ledger=ledger.snapshot(),
         B_size=int(np.sum(in_B)), S_size=S,

@@ -47,6 +47,9 @@ class EmulatedTask:
     seed: int = 0
     min_train: int = 8
     sweep_page: int = 65536       # pool-sweep page rows (L(.)/commit pass)
+    annotation: Optional[object] = None  # AnnotationService: route
+                                  # human_label through a noisy multi-
+                                  # annotator oracle (None = perfect)
 
     def __post_init__(self):
         root = np.random.default_rng(self.seed)
@@ -57,6 +60,18 @@ class EmulatedTask:
 
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:
+        """Purchased human labels — aggregated noisy-annotator votes when
+        an :attr:`annotation` service is attached (the buyer charges per
+        vote through ``CostLedger.pay_human``), perfect ground truth
+        otherwise (the paper's assumption)."""
+        idx = np.asarray(idx, np.int64)
+        gt = self.labels_gt[idx]
+        if self.annotation is not None:
+            return self.annotation.annotate(idx, gt)
+        return gt
+
+    def oracle_labels(self, idx: np.ndarray) -> np.ndarray:
+        """TRUE labels for evaluation only (never charged, never noisy)."""
         return self.labels_gt[np.asarray(idx, np.int64)]
 
     # -- training -----------------------------------------------------------

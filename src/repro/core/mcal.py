@@ -35,7 +35,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import selection as sel
-from repro.core.cost import CostLedger, LabelingService, TrainCostModel
+from repro.core.cost import (CostLedger, LabelQuality, LabelingService,
+                             TrainCostModel)
 from repro.core.powerlaw import PowerLaw, fit_power_law
 from repro.core.search import SearchResult, adapt_delta, budget_search, joint_search
 
@@ -65,6 +66,13 @@ class MCALConfig:
     fit_async: bool = False         # defer each retrain + its measurement
                                     # sweep onto the fit-engine worker,
                                     # synchronizing at the next consumer
+    label_quality: Optional[LabelQuality] = None
+                                    # noisy annotation-service economics:
+                                    # residual aggregated-label error is
+                                    # folded into the accuracy target and
+                                    # future human labels are priced
+                                    # repeats-inclusive in the joint
+                                    # search (None = perfect labels)
 
 
 @dataclasses.dataclass
@@ -101,6 +109,17 @@ class MCALResult:
         return self.ledger["total"]
 
 
+def oracle_labels(task, idx: np.ndarray) -> np.ndarray:
+    """TRUE labels for evaluation only.  Tasks expose ``oracle_labels``
+    precisely so measurement never routes through ``human_label`` — with
+    a noisy annotation service attached, that path returns aggregated
+    noisy votes AND consumes priced annotation requests, so using it as
+    the free evaluation oracle both corrupted ``measured_error`` and
+    bypassed ``CostLedger.pay_human`` for the requests it burned."""
+    fn = getattr(task, "oracle_labels", None)
+    return fn(idx) if fn is not None else task.human_label(idx)
+
+
 class SharedPool:
     """Label store shared across campaigns (arch selection buys labels once)."""
 
@@ -114,11 +133,20 @@ class SharedPool:
         self.ledger = ledger or CostLedger()
 
     def buy_labels(self, task, idx: np.ndarray, service: LabelingService):
+        """THE charging site: every purchased label pays through
+        ``CostLedger.pay_human`` at the service's tier rates — with an
+        annotation service on the task, repeats-inclusive (the per-call
+        vote count the service reports, so adaptive-repeats batches are
+        charged exactly what they consumed)."""
         idx = np.asarray(idx, np.int64)
         fresh = idx[self.labels[idx] < 0]
         if len(fresh):
+            ann = getattr(task, "annotation", None)
+            v0 = ann.votes_bought if ann is not None else 0
             self.labels[fresh] = task.human_label(fresh)
-            self.ledger.pay_human(len(fresh), service)
+            votes = (ann.votes_bought - v0) if ann is not None \
+                else len(fresh)
+            self.ledger.pay_human(len(fresh), service, votes=votes)
 
     def unlabeled_candidates(self) -> np.ndarray:
         mask = (~self.is_test) & (~self.in_B)
@@ -269,6 +297,17 @@ class MCALCampaign:
         self._fit_models_cache = (key, laws, cm)
         return laws, cm
 
+    # -- noisy-annotation economics ---------------------------------------
+    def _quality(self) -> LabelQuality:
+        return self.cfg.label_quality or LabelQuality()
+
+    def _effective_service(self) -> LabelingService:
+        """Future human labels priced repeats-inclusive: what every
+        prediction (joint search, delta adaptation, bailout/budget
+        thresholds) must use, or machine labeling looks worse than it is
+        relative to a fictional one-vote-per-label service."""
+        return self._quality().effective_service(self.service)
+
     def search(self, keep_surface: Optional[bool] = None) -> SearchResult:
         self._sync_fit()
         laws, cm = self._fit_models()
@@ -276,12 +315,16 @@ class MCALCampaign:
         kw = dict(pool_size=self.task.pool_size, test_size=len(p.T_idx),
                   current_B=len(p.B_idx), spent=self.own_training,
                   laws=laws, cost_model=cm, delta=self.delta,
-                  service=self.service)
+                  service=self._effective_service())
         if self.cfg.budget is not None:
             return budget_search(budget=self.cfg.budget, **kw)
-        return joint_search(eps_target=self.cfg.eps_target,
-                            keep_surface=self.cfg.keep_surface
-                            if keep_surface is None else keep_surface, **kw)
+        # residual aggregated-label error eats into the target: even a
+        # perfect classifier measured against service labels cannot beat
+        # the annotators, so the machine-label slice must clear the rest
+        return joint_search(
+            eps_target=self._quality().effective_target(self.cfg.eps_target),
+            keep_surface=self.cfg.keep_surface
+            if keep_surface is None else keep_surface, **kw)
 
     # -- one loop body --------------------------------------------------------
     def iteration(self, *, acquire: bool = True,
@@ -331,7 +374,9 @@ class MCALCampaign:
         if self.cfg.budget is not None:
             # budget variant: stop training when the next acquisition would
             # break the budget (reserve the residual human labels' worth).
-            next_spend = (self.delta * self.service.price_per_label +
+            # Acquisition labels are priced repeats-inclusive.
+            next_spend = (self.delta *
+                          self._effective_service().price_per_label +
                           self._fit_models()[1].iteration_cost(
                               len(p.B_idx) + self.delta))
             if p.ledger.total + float(next_spend) > self.cfg.budget:
@@ -342,7 +387,7 @@ class MCALCampaign:
             # bail-out (paper §5.1 footnote): exploration tax exceeded while
             # the classifier still cannot machine-label any meaningful
             # fraction (ImageNet behaviour) -> human-label everything.
-            human_all = X * self.service.price_per_label
+            human_all = X * self._effective_service().price_per_label
             no_meaningful_S = (not res.feasible or res.theta_opt == 0.0 or
                                res.machine_labeled < self.cfg.bailout_min_s * X)
             if no_meaningful_S and \
@@ -357,8 +402,8 @@ class MCALCampaign:
                 current_B=len(p.B_idx), B_opt=res.B_opt, cstar=res.cost,
                 spent=self.own_training, pool_size=X, test_size=len(p.T_idx),
                 machine_labeled=res.machine_labeled,
-                cost_model=self._fit_models()[1], service=self.service,
-                beta=self.cfg.beta)
+                cost_model=self._fit_models()[1],
+                service=self._effective_service(), beta=self.cfg.beta)
             if nd > 0:
                 self.delta = nd
 
@@ -512,8 +557,9 @@ class MCALCampaign:
             # afford as many residual human labels as the budget allows;
             # machine-label the most confident rest (accuracy is what gives)
             afford = max(self.cfg.budget - p.ledger.total, 0.0)
-            n_human = min(int(afford / self.service.price_per_label),
-                          len(remaining))
+            n_human = min(
+                int(afford / self._effective_service().price_per_label),
+                len(remaining))
             m = len(remaining) - n_human
             order, pred = self._machine_label(remaining)
             S_idx = remaining[order[:m]]
@@ -522,7 +568,7 @@ class MCALCampaign:
                 p.labels[S_idx] = pred[order[:m]]
                 machine_mask[S_idx] = True
             p.buy_labels(self.task, residual, self.service)
-            gt = self.task.human_label(np.arange(X))
+            gt = oracle_labels(self.task, np.arange(X))
             return MCALResult(
                 labels=p.labels.copy(), machine_mask=machine_mask,
                 ledger=p.ledger.snapshot(), history=self.history,
@@ -543,7 +589,12 @@ class MCALCampaign:
             fine = np.linspace(0.01, 1.0, 100)
             curve = sel.machine_label_error_curve(
                 stats_T, correct, fine, self.cfg.l_metric)
-            overall = fine * len(remaining) / X * curve
+            S_frac = fine * len(remaining) / X
+            # the human-labeled (1 - S/X) share carries the annotation
+            # service's residual aggregated-label error; the machine slice
+            # must fit in what is left of the target
+            overall = S_frac * curve + \
+                (1.0 - S_frac) * self._quality().residual_error
             ok = np.nonzero(overall <= self.cfg.eps_target)[0]
             theta_final = float(fine[ok[-1]]) if len(ok) else 0.0
             m = int(round(theta_final * len(remaining)))
@@ -560,7 +611,10 @@ class MCALCampaign:
                 p.buy_labels(self.task, residual, self.service)
                 S_size = m
 
-        gt = self.task.human_label(np.arange(X))  # oracle, evaluation only
+        # evaluation oracle — NEVER human_label: with an annotation
+        # service that would burn (uncharged) requests and compare against
+        # noisy votes (see oracle_labels)
+        gt = oracle_labels(self.task, np.arange(X))
         measured_error = float(np.mean(p.labels != gt))
         return MCALResult(
             labels=p.labels.copy(), machine_mask=machine_mask,
@@ -618,10 +672,18 @@ class MCALCampaign:
                 "training_spent": float(r.training_spent)}
                 for r in self.history],
             "rng": self.rng.bit_generator.state,
+            # annotation-service runtime state (None without a noisy
+            # oracle): per-worker confusion estimates, the pending-request
+            # cursor, and the repeats ledger — with the persisted label
+            # store this is exactly what makes a preempted noisy-oracle
+            # campaign replay future requests bit-identically.
+            "annotation": (self.task.annotation.state_dict()
+                           if getattr(self.task, "annotation", None)
+                           is not None else None),
             "labels": p.labels.tolist(),
             "is_test": np.nonzero(p.is_test)[0].tolist(),
             "B_idx": p.B_idx.tolist(),
-            "ledger": p.ledger.snapshot(),
+            "ledger": p.ledger.as_dict(),
             "eps_hist": {str(t): v for t, v in self.eps_hist.items()},
             "train_sizes": self.train_sizes,
             "train_costs": self.train_costs,
@@ -641,7 +703,6 @@ class MCALCampaign:
         }
 
     def load_state_dict(self, s: Dict):
-        from repro.core.cost import CostLedger
         # fold any in-flight async retrain first: discarding its future
         # while the worker still trains would race the resume retrain
         # below on the same task/engine buffers
@@ -654,9 +715,10 @@ class MCALCampaign:
         p.B_idx = np.asarray(s["B_idx"], np.int64)
         p.in_B[:] = False
         p.in_B[p.B_idx] = True
-        led = s["ledger"]
-        p.ledger = CostLedger(human=led["human"], training=led["training"],
-                              human_labels=led["human_labels"])
+        p.ledger = CostLedger.from_dict(s["ledger"])
+        ann = getattr(self.task, "annotation", None)
+        if ann is not None and s.get("annotation") is not None:
+            ann.load_state_dict(s["annotation"])
         self.eps_hist = {float(t): [tuple(x) for x in v]
                          for t, v in s["eps_hist"].items()}
         self.train_sizes = list(s["train_sizes"])

@@ -70,6 +70,13 @@ class LiveTask:
                                      # the per-step host-loop oracle)
     fit_resident: bool = False       # keep the labeled set device-resident,
                                      # scatter in only newly bought labels
+    mesh: Optional[object] = None    # host/device mesh: microbatch dim of
+                                     # the scoring sweep + the fused-fit
+                                     # program shard over its "data" axis
+    annotation: Optional[object] = None  # AnnotationService: route
+                                     # human_label through a noisy multi-
+                                     # annotator oracle (None = the
+                                     # paper's perfect-label assumption)
 
     def __post_init__(self):
         from repro.configs.base import ModelConfig, TrainConfig
@@ -94,17 +101,32 @@ class LiveTask:
                                          SweepConfig)
         from repro.training.fit_device import FitConfig, FitEngine
         self._engine = PoolScoringEngine(
-            self.model, ScoringConfig(microbatch=self.score_microbatch))
+            self.model, ScoringConfig(microbatch=self.score_microbatch),
+            mesh=self.mesh)
         self._sweep = PoolSweepRunner(
             EngineSweepAdapter(self._engine),
             SweepConfig(page_rows=self.sweep_page))
         self._fit = FitEngine(self.model, self.tc,
                               FitConfig(epochs=self.epochs,
-                                        batch_size=self.batch_size))
+                                        batch_size=self.batch_size),
+                              mesh=self.mesh)
         self._res_idx = np.zeros((0,), np.int64)  # resident-pool row ledger
 
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:
+        """Purchased human labels.  With an :attr:`annotation` service
+        attached these are AGGREGATED noisy-annotator votes (charged per
+        request by the buyer — see ``SharedPool.buy_labels``); without
+        one, the paper's perfect-label assumption."""
+        idx = np.asarray(idx, np.int64)
+        gt = self.groundtruth[idx]
+        if self.annotation is not None:
+            return self.annotation.annotate(idx, gt)
+        return gt
+
+    def oracle_labels(self, idx: np.ndarray) -> np.ndarray:
+        """TRUE labels for evaluation only — never charged, never noisy
+        (the simulation oracle measured_error is computed against)."""
         return self.groundtruth[np.asarray(idx, np.int64)]
 
     # -- training ------------------------------------------------------------

@@ -8,6 +8,18 @@ Replay mode (paper-scale emulated learning curves):
     PYTHONPATH=src python -m repro.launch.label --dataset cifar10 \
         --arch resnet18 --service amazon
 
+Noisy annotation service (repeated labeling, aggregated on device):
+    PYTHONPATH=src python -m repro.launch.label --dataset cifar10 \
+        --annotator-noise 0.2 --label-repeats 3 --annotator-aggregate ds \
+        --adaptive-repeats --max-repeats 5
+
+``--annotator-noise > 0`` (or ``--label-repeats > 1``) replaces the
+perfect oracle with a seeded noisy-annotator pool: every human label is
+an aggregation (majority vote or Dawid-Skene EM, jit-compiled on device)
+over per-worker votes, every vote is charged at the service rate, and
+the campaign folds the residual aggregated-label error into its accuracy
+target (``MCALConfig.label_quality``).
+
 Campaign state (ledger, pool bitmap, per-theta history, fitted power
 laws, engine pack-shape cache keys) checkpoints to ``--state`` after
 every iteration, so a preempted campaign resumes mid-loop — and during
@@ -32,6 +44,11 @@ import os
 # drift fails CI.
 METRIC_CHOICES = ("margin", "entropy", "least_confidence", "kcenter",
                   "random")
+
+# annotation.service.AGGREGATORS, duplicated as a literal for the same
+# reason as METRIC_CHOICES (parsing must not import jax); the launcher
+# tests assert the sets match.
+AGGREGATE_CHOICES = ("majority", "ds")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -80,9 +97,74 @@ def build_parser() -> argparse.ArgumentParser:
                     help="run at most N iterations this invocation, then "
                          "save --state and exit resumable (0 = run to "
                          "completion)")
+    ap.add_argument("--mesh", default="",
+                    help="host/device mesh spec, e.g. 'data=4': the "
+                         "scoring sweep and the fused-fit program shard "
+                         "over it (live mode; smoke-testable under "
+                         "--xla_force_host_platform_device_count)")
+    # -- annotation service (noisy multi-annotator oracle) -----------------
+    ap.add_argument("--annotator-noise", type=float, default=0.0,
+                    help="per-vote error rate of the noisy annotator "
+                         "pool (0 = the paper's perfect-oracle "
+                         "assumption, no service attached)")
+    ap.add_argument("--annotator-workers", type=int, default=5,
+                    help="annotator pool size (each worker votes at most "
+                         "once per item)")
+    ap.add_argument("--annotator-spammers", type=float, default=0.0,
+                    help="fraction of workers answering uniformly at "
+                         "random")
+    ap.add_argument("--annotator-aggregate", default="majority",
+                    choices=AGGREGATE_CHOICES,
+                    help="vote aggregation: device majority vote or "
+                         "Dawid-Skene EM")
+    ap.add_argument("--label-repeats", type=int, default=1,
+                    help="votes bought per human label (repeated "
+                         "labeling; each vote is charged at the service "
+                         "rate)")
+    ap.add_argument("--max-repeats", type=int, default=0,
+                    help="adaptive-repeats vote cap (0 = --label-repeats, "
+                         "no top-up)")
+    ap.add_argument("--adaptive-repeats", action="store_true",
+                    help="stop buying votes for an item once its "
+                         "aggregated posterior confidence clears "
+                         "--repeat-confidence (Liao et al.)")
+    ap.add_argument("--repeat-confidence", type=float, default=0.9,
+                    help="adaptive-repeats confidence threshold")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     return ap
+
+
+def build_mesh(spec: str):
+    """``--mesh data=4`` -> a host mesh with those axes (None for '')."""
+    if not spec:
+        return None
+    from repro import compat
+    axes, shape = [], []
+    for part in spec.split(","):
+        name, _, n = part.partition("=")
+        axes.append(name.strip())
+        shape.append(int(n))
+    return compat.make_mesh(tuple(shape), tuple(axes), axis_types=True)
+
+
+def build_annotation(args, num_classes: int, service):
+    """The campaign's annotation-service runtime from the CLI flags —
+    None when the flags describe the perfect oracle (no noise, single
+    vote, no adaptive policy)."""
+    if args.annotator_noise <= 0 and args.label_repeats <= 1 \
+            and not args.adaptive_repeats:
+        return None
+    from repro.annotation import make_annotation_service
+    return make_annotation_service(
+        num_classes, n_workers=args.annotator_workers,
+        noise=args.annotator_noise, spammer_frac=args.annotator_spammers,
+        repeats=args.label_repeats,
+        max_repeats=args.max_repeats or None,
+        adaptive=args.adaptive_repeats,
+        confidence=args.repeat_confidence,
+        aggregator=args.annotator_aggregate,
+        pricing=service, seed=args.seed)
 
 
 def _save_state(path: str, campaign=None, cursor=None, campaign_blob=None):
@@ -157,10 +239,21 @@ def main():
     from repro.data.synth import make_classification
 
     service = SERVICES[args.service]
+    if args.live:
+        num_classes = args.classes
+    else:
+        from repro.core.emulator import DATASETS
+        num_classes = DATASETS[args.dataset]["classes"]
+    annotation = build_annotation(args, num_classes, service)
     cfg = MCALConfig(eps_target=args.eps, metric=args.metric,
                      budget=args.budget, seed=args.seed,
                      sweep_async=args.sweep_async,
-                     fit_async=args.fit_async)
+                     fit_async=args.fit_async,
+                     # measured (calibration-batch) quality: what DS +
+                     # adaptive repeats actually deliver, deterministic
+                     # per seed so resumed runs rebuild the same config
+                     label_quality=(annotation.calibrate()
+                                    if annotation is not None else None))
     if args.live:
         x, y = make_classification(args.pool, num_classes=args.classes,
                                    difficulty=args.difficulty,
@@ -168,10 +261,12 @@ def main():
         task = LiveTask(features=x, groundtruth=y, num_classes=args.classes,
                         seed=args.seed, sweep_page=args.sweep_page,
                         fit_fused=args.fit_fused,
-                        fit_resident=args.fit_resident)
+                        fit_resident=args.fit_resident,
+                        mesh=build_mesh(args.mesh), annotation=annotation)
     else:
         task = make_emulated_task(args.dataset, args.arch, seed=args.seed,
                                   sweep_page=args.sweep_page)
+        task.annotation = annotation
 
     res, camp = run_campaign(task, service, cfg, state_path=args.state,
                              sweep_ckpt_pages=args.sweep_ckpt_pages,
@@ -184,6 +279,8 @@ def main():
         return
     X = task.pool_size
     human_all = X * service.price_per_label
+    if annotation is not None:   # the honest baseline pays repeats too
+        human_all *= cfg.label_quality.avg_repeats
     report = {
         "decision": res.decision,
         "B_frac": res.B_size / X,
@@ -196,6 +293,13 @@ def main():
         "ledger": res.ledger,
         "iterations": len(res.history),
     }
+    if annotation is not None:
+        report["annotation"] = {
+            "votes": annotation.votes_bought,
+            "avg_repeats": annotation.avg_repeats(),
+            "residual_error_est": annotation.estimated_residual_error(),
+            "worker_accuracy": annotation.worker_accuracy().tolist(),
+        }
     print(json.dumps(report, indent=2))
     if args.out:
         with open(args.out, "w") as f:

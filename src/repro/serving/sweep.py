@@ -121,7 +121,12 @@ class SweepCheckpoint:
 
 class SweepFuture:
     """Async sweep handle (:meth:`PoolSweepRunner.submit`).  ``result()``
-    is the synchronization point — the fold the caller eventually needs."""
+    is the synchronization point — the fold the caller eventually needs.
+
+    This is the ONE worker-handle type every async runtime shares: the
+    fit engine re-exports it as ``FitFuture`` and the annotation broker
+    as ``AnnotationFuture`` — hardening (cancellation semantics, mapped
+    results, timeout behaviour) lands here once for all three."""
 
     def __init__(self, future, map_result: Optional[Callable] = None):
         self._future = future

@@ -1,0 +1,618 @@
+"""Annotation-service runtime: noisy oracles, device vote aggregation,
+the async broker, and the campaign integration.
+
+The oracle-test contract (same spirit as the selection/sweep/fit
+engines): device majority vote agrees EXACTLY with the host reference
+(integer counts, first-class-index tie-break on both sides); device
+Dawid-Skene EM posteriors are atol-bounded against the float64 host EM
+with IDENTICAL argmax labels — across seeded (items, workers, classes,
+repeats, ragged-batch) grids.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.annotation import (AGGREGATORS, AnnotationService, AnnotatorConfig,
+                              AnnotatorPool, BudgetExceeded, RepeatPolicy,
+                              VoteAggregator, dawid_skene_host,
+                              majority_vote_host, make_annotation_service,
+                              make_annotator_pool, vote_counts_host)
+from repro.annotation.aggregate import AggregateConfig
+from repro.core.cost import CostLedger, LabelingService
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _vote_matrix(n, workers, classes, repeats, *, noise=0.25,
+                 spammer_frac=0.0, seed=0):
+    """A round-robin (n, workers) vote matrix with ``repeats`` votes per
+    item — ``AnnotatorPool.vote_matrix``, the service's worker schedule."""
+    pool = make_annotator_pool(workers, classes, noise=noise,
+                               spammer_frac=spammer_frac, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    gt = rng.integers(0, classes, n)
+    return pool.vote_matrix(np.arange(n), gt, repeats), gt, pool
+
+
+# ---------------------------------------------------------------------------
+# the noisy oracle
+# ---------------------------------------------------------------------------
+
+
+def test_pool_confusions_are_row_stochastic():
+    pool = make_annotator_pool(7, 5, noise=0.3, spammer_frac=0.3,
+                               biased_frac=0.2, seed=3)
+    assert pool.confusion.shape == (7, 5, 5)
+    np.testing.assert_allclose(pool.confusion.sum(axis=2), 1.0, atol=1e-12)
+    assert len(pool.profiles) == 7
+    assert set(pool.profiles) <= {"reliable", "spammer", "biased"}
+
+
+def test_pool_profile_mix_counts():
+    pool = make_annotator_pool(10, 4, noise=0.2, spammer_frac=0.2,
+                               biased_frac=0.3, seed=0)
+    assert sum(p == "spammer" for p in pool.profiles) == 2
+    assert sum(p == "biased" for p in pool.profiles) == 3
+
+
+def test_annotate_deterministic_per_seed_worker_item():
+    """A worker is a consistent annotator: the same (seed, worker, item)
+    request always returns the same vote — across calls, orderings, and
+    pool instances (what makes resumed campaigns replay identically)."""
+    cfg = AnnotatorConfig(n_workers=4, num_classes=6, noise=0.4, seed=11)
+    a, b = AnnotatorPool(cfg), AnnotatorPool(cfg)
+    rng = np.random.default_rng(0)
+    idx = rng.choice(5000, 300, replace=False)
+    gt = rng.integers(0, 6, 300)
+    for w in range(4):
+        v1 = a.annotate(idx, gt, w)
+        v2 = b.annotate(idx, gt, w)
+        np.testing.assert_array_equal(v1, v2)
+        # a permuted request sees the same per-item votes
+        p = rng.permutation(300)
+        np.testing.assert_array_equal(a.annotate(idx[p], gt[p], w), v1[p])
+
+
+def test_annotate_zero_noise_is_perfect():
+    pool = make_annotator_pool(3, 5, noise=0.0, seed=0)
+    gt = np.arange(5).repeat(4)
+    for w in range(3):
+        np.testing.assert_array_equal(
+            pool.annotate(np.arange(20), gt, w), gt)
+
+
+def test_spammer_is_uninformative_and_reliable_is_not():
+    pool = make_annotator_pool(4, 4, noise=0.1, spammer_frac=0.25, seed=2)
+    spam = pool.profiles.index("spammer")
+    rel = pool.profiles.index("reliable")
+    rng = np.random.default_rng(0)
+    gt = rng.integers(0, 4, 4000)
+    idx = np.arange(4000)
+    acc_spam = np.mean(pool.annotate(idx, gt, spam) == gt)
+    acc_rel = np.mean(pool.annotate(idx, gt, rel) == gt)
+    assert acc_spam < 0.35 and acc_rel > 0.8
+
+
+def test_expected_majority_error_monotone_in_repeats():
+    pool = make_annotator_pool(7, 10, noise=0.25, seed=0)
+    errs = [pool.expected_majority_error(r) for r in (1, 3, 5, 7)]
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+    assert errs[0] == pytest.approx(pool.per_vote_error())
+
+
+# ---------------------------------------------------------------------------
+# aggregation: device vs host oracle grids
+# ---------------------------------------------------------------------------
+
+GRID = [
+    # (items, workers, classes, repeats)
+    (1, 3, 2, 3),
+    (7, 5, 10, 1),
+    (60, 5, 10, 3),
+    (100, 7, 4, 5),
+    (513, 5, 10, 3),       # pow2-boundary ragged batch
+    (1024, 3, 3, 2),
+    (1500, 9, 25, 7),
+]
+
+
+@pytest.mark.parametrize("n,workers,classes,repeats", GRID)
+def test_majority_device_matches_host_exactly(n, workers, classes, repeats):
+    votes, _, _ = _vote_matrix(n, workers, classes, repeats,
+                               seed=n + repeats)
+    lh, ch = majority_vote_host(votes, classes)
+    agg = VoteAggregator(classes, AggregateConfig(microbatch=256))
+    ld, cd = agg.majority(votes)
+    np.testing.assert_array_equal(lh, ld)
+    np.testing.assert_allclose(ch, cd, atol=1e-7)
+
+
+def test_majority_tie_breaks_by_first_class_index():
+    # 1-1 and 2-2 ties; class order deliberately descending
+    votes = np.asarray([[3, 1, -1, -1],
+                        [2, 0, 2, 0],
+                        [-1, -1, -1, -1]], np.int32)
+    lh, ch = majority_vote_host(votes, 4)
+    ld, cd = VoteAggregator(4).majority(votes)
+    np.testing.assert_array_equal(lh, [1, 0, 0])   # lowest class wins ties
+    np.testing.assert_array_equal(ld, lh)
+    assert ch[2] == 0.0 and cd[2] == 0.0           # no votes -> class 0
+
+
+@pytest.mark.parametrize("n,workers,classes,repeats", GRID)
+def test_dawid_skene_device_matches_host(n, workers, classes, repeats):
+    votes, _, _ = _vote_matrix(n, workers, classes, repeats,
+                               seed=2 * n + repeats, spammer_frac=0.2)
+    ref = dawid_skene_host(votes, classes)
+    agg = VoteAggregator(classes, AggregateConfig(microbatch=256))
+    dev = agg.dawid_skene(votes)
+    np.testing.assert_array_equal(ref.labels, dev.labels)
+    np.testing.assert_allclose(ref.posterior, dev.posterior, atol=1e-4)
+    np.testing.assert_allclose(ref.confusion, dev.confusion, atol=1e-4)
+    np.testing.assert_allclose(ref.prior, dev.prior, atol=1e-4)
+
+
+def test_dawid_skene_identifies_the_spammer():
+    votes, gt, pool = _vote_matrix(3000, 5, 10, 5, noise=0.15,
+                                   spammer_frac=0.2, seed=0)
+    res = VoteAggregator(10).dawid_skene(votes)
+    est_acc = np.einsum("wcc->w", res.confusion) / 10
+    spam = pool.profiles.index("spammer")
+    rel = [w for w in range(5) if pool.profiles[w] == "reliable"]
+    assert est_acc[spam] < 0.3
+    assert all(est_acc[w] > 0.7 for w in rel)
+
+
+def test_dawid_skene_beats_majority_with_spammers():
+    votes, gt, _ = _vote_matrix(4000, 5, 10, 5, noise=0.25,
+                                spammer_frac=0.4, seed=1)
+    maj, _ = majority_vote_host(votes, 10)
+    ds = VoteAggregator(10).dawid_skene(votes)
+    acc_maj = np.mean(maj == gt)
+    acc_ds = np.mean(ds.labels == gt)
+    assert acc_ds > acc_maj   # down-weighting spammers must pay off
+
+
+def test_aggregator_pack_buckets_stay_logarithmic():
+    """Growing request batches reuse O(log N) compiled programs — the
+    pack_shape bucketing contract every engine shares."""
+    agg = VoteAggregator(4, AggregateConfig(microbatch=64))
+    for n in range(1, 600, 7):
+        votes = np.zeros((n, 3), np.int32)
+        agg.majority(votes)
+    assert len(agg.cache_keys()) <= 8
+
+
+def test_aggregate_entry_point_and_unknown_method():
+    votes, _, _ = _vote_matrix(50, 5, 4, 3)
+    agg = VoteAggregator(4)
+    l1, c1, ds = agg.aggregate(votes, "majority")
+    assert ds is None and len(l1) == 50
+    l2, c2, ds2 = agg.aggregate(votes, "ds")
+    assert ds2 is not None
+    np.testing.assert_array_equal(l2, ds2.labels)
+    with pytest.raises(ValueError):
+        agg.aggregate(votes, "mode")
+
+
+def test_vote_counts_host_ignores_missing():
+    votes = np.asarray([[0, -1, 1], [-1, -1, -1]], np.int32)
+    counts = vote_counts_host(votes, 3)
+    np.testing.assert_array_equal(counts, [[1, 1, 0], [0, 0, 0]])
+
+
+# ---------------------------------------------------------------------------
+# the service: charging, adaptive repeats, broker, persistence
+# ---------------------------------------------------------------------------
+
+
+def _gt(n, classes=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.arange(n), rng.integers(0, classes, n)
+
+
+def test_service_charges_repeats_times_tier_pricing():
+    tiered = LabelingService("tiered", 0.04,
+                             tiers=((0, 0.04), (1000, 0.01)))
+    svc = make_annotation_service(10, n_workers=5, noise=0.1, repeats=3,
+                                  pricing=tiered, seed=0)
+    idx, gt = _gt(500)
+    svc.annotate(idx, gt)
+    # 1500 votes: first 1000 at $0.04, the 500 past the boundary at $0.01
+    assert svc.votes_bought == 1500
+    assert svc.ledger.human == pytest.approx(1000 * 0.04 + 500 * 0.01)
+    assert svc.ledger.human_labels == 500
+    # the next batch continues at the discounted tier
+    svc.annotate(idx + 500, gt)
+    assert svc.ledger.human == pytest.approx(1000 * 0.04 + 2000 * 0.01)
+
+
+def test_service_label_accuracy_improves_with_repeats():
+    accs = {}
+    for repeats in (1, 5):
+        svc = make_annotation_service(10, n_workers=5, noise=0.3,
+                                      repeats=repeats, seed=0)
+        idx, gt = _gt(3000)
+        labels = svc.annotate(idx, gt)
+        accs[repeats] = np.mean(labels == gt)
+    assert accs[5] > accs[1]
+
+
+def test_adaptive_repeats_saves_votes_and_stays_accurate():
+    idx, gt = _gt(2000)
+    flat = make_annotation_service(10, n_workers=7, noise=0.2, repeats=5,
+                                   seed=0)
+    lab_flat = flat.annotate(idx, gt)
+    adap = make_annotation_service(10, n_workers=7, noise=0.2, repeats=2,
+                                   max_repeats=5, adaptive=True,
+                                   confidence=0.9, seed=0)
+    lab_adap = adap.annotate(idx, gt)
+    assert adap.votes_bought < flat.votes_bought          # the point
+    assert adap.votes_bought >= 2 * len(idx)              # min repeats
+    assert 2.0 <= adap.avg_repeats() <= 5.0
+    acc_flat = np.mean(lab_flat == gt)
+    acc_adap = np.mean(lab_adap == gt)
+    assert acc_adap >= acc_flat - 0.02   # near-flat accuracy, fewer votes
+
+
+def test_adaptive_confidence_extremes():
+    idx, gt = _gt(300)
+    never = make_annotation_service(10, n_workers=5, noise=0.2, repeats=2,
+                                    max_repeats=5, adaptive=True,
+                                    confidence=0.0, seed=0)
+    never.annotate(idx, gt)
+    assert never.votes_bought == 2 * len(idx)   # everyone already confident
+    always = make_annotation_service(10, n_workers=5, noise=0.2, repeats=2,
+                                     max_repeats=5, adaptive=True,
+                                     confidence=1.1, seed=0)
+    always.annotate(idx, gt)
+    assert always.votes_bought == 5 * len(idx)  # nobody ever clears it
+
+
+def test_service_budget_refuses_overdraft_without_phantom_state():
+    svc = make_annotation_service(
+        10, n_workers=5, noise=0.1, repeats=2, seed=0,
+        pricing=LabelingService("svc", 0.04), budget=10.0)
+    idx, gt = _gt(100)
+    svc.annotate(idx, gt)                 # 200 votes = $8
+    before = (svc.request_cursor, svc.votes_bought,
+              svc.ledger.human, svc.ledger.human_labels)
+    with pytest.raises(BudgetExceeded):
+        svc.annotate(idx + 100, gt)       # base rounds would pass $10
+    # transactional refusal: nothing charged, counted, or cursor-advanced
+    # (a retried batch replays identically)
+    assert (svc.request_cursor, svc.votes_bought,
+            svc.ledger.human, svc.ledger.human_labels) == before
+    assert svc.ledger.human <= 10.0
+
+
+def test_adaptive_topups_stop_at_budget_instead_of_raising():
+    """The mandatory base rounds are budget-checked up front; adaptive
+    top-ups degrade gracefully — an unaffordable round just stops the
+    topping-up and the batch still returns labels."""
+    idx, gt = _gt(100)
+    svc = make_annotation_service(
+        10, n_workers=5, noise=0.3, repeats=2, max_repeats=5,
+        adaptive=True, confidence=1.1,   # would top up everyone forever
+        pricing=LabelingService("svc", 0.04), budget=10.0, seed=0)
+    labels = svc.annotate(idx, gt)       # base 200 votes = $8; one $4
+    assert len(labels) == 100            # top-up round is unaffordable
+    assert svc.votes_bought == 200
+    assert svc.ledger.human == pytest.approx(8.0)
+
+
+def test_repeat_policy_validation():
+    with pytest.raises(AssertionError):
+        RepeatPolicy(repeats=0)
+    with pytest.raises(AssertionError):
+        RepeatPolicy(repeats=3, max_repeats=2)
+    with pytest.raises(AssertionError):
+        RepeatPolicy(aggregator="mode")
+    with pytest.raises(AssertionError):
+        # more repeats than workers: one vote per worker max
+        AnnotationService(make_annotator_pool(3, 10),
+                          RepeatPolicy(repeats=4))
+    # adaptive silent-no-op guards: no top-up headroom, and single-vote
+    # majority confidence is identically 1.0 (nothing ever tops up)
+    with pytest.raises(AssertionError):
+        RepeatPolicy(repeats=2, adaptive=True)
+    with pytest.raises(AssertionError):
+        RepeatPolicy(repeats=1, max_repeats=5, adaptive=True,
+                     aggregator="majority")
+    # single-vote adaptivity IS meaningful under DS posteriors
+    p = RepeatPolicy(repeats=1, max_repeats=5, adaptive=True,
+                     aggregator="ds")
+    assert p.cap == 5
+
+
+def test_adaptive_single_vote_ds_actually_tops_up():
+    """The allowed single-vote adaptive shape (DS posteriors) must
+    really buy extra votes for unsure items — the majority twin of this
+    config is rejected at policy construction as a silent no-op."""
+    idx, gt = _gt(1000)
+    svc = make_annotation_service(10, n_workers=5, noise=0.3, repeats=1,
+                                  max_repeats=5, adaptive=True,
+                                  aggregator="ds", seed=0)
+    labels = svc.annotate(idx, gt)
+    assert svc.votes_bought > len(idx)       # top-ups fired
+    single = make_annotation_service(10, n_workers=5, noise=0.3,
+                                     repeats=1, seed=0)
+    acc1 = np.mean(single.annotate(idx, gt) == gt)
+    assert np.mean(labels == gt) > acc1      # and bought accuracy
+
+
+def test_broker_submit_matches_sync_annotate():
+    """The broker is the async twin of ``annotate``: the same request
+    batches in the same order produce identical labels and charges (they
+    serialize on the worker thread, one cursor step per batch)."""
+    idx, gt = _gt(400)
+    sync = make_annotation_service(10, n_workers=5, noise=0.2, repeats=3,
+                                   aggregator="ds", seed=4)
+    ref = [sync.annotate(idx[:150], gt[:150]),
+           sync.annotate(idx[150:], gt[150:])]
+
+    broker = make_annotation_service(10, n_workers=5, noise=0.2, repeats=3,
+                                     aggregator="ds", seed=4)
+    futs = [broker.submit(idx[:150], gt[:150]),
+            broker.submit(idx[150:], gt[150:])]
+    got = [f.result() for f in futs]
+    np.testing.assert_array_equal(np.concatenate(ref),
+                                  np.concatenate(got))
+    assert broker.votes_bought == sync.votes_bought
+    assert broker.request_cursor == sync.request_cursor == 2
+
+
+def test_service_state_roundtrip_replays_identically():
+    """The pending-request cursor + ledger + worker stats survive a
+    JSON round-trip: the resumed service buys the identical votes."""
+    def fresh():
+        return make_annotation_service(10, n_workers=5, noise=0.25,
+                                       repeats=2, max_repeats=4,
+                                       adaptive=True, aggregator="ds",
+                                       seed=7)
+    idx, gt = _gt(600)
+    a = fresh()
+    a.annotate(idx[:300], gt[:300])
+    blob = json.dumps(a.state_dict())     # strict JSON
+    b = fresh()
+    b.load_state_dict(json.loads(blob))
+    assert b.request_cursor == a.request_cursor
+    assert b.votes_bought == a.votes_bought
+    la = a.annotate(idx[300:], gt[300:])
+    lb = b.annotate(idx[300:], gt[300:])
+    np.testing.assert_array_equal(la, lb)
+    assert a.ledger.human == pytest.approx(b.ledger.human)
+    np.testing.assert_array_equal(a.worker_accuracy(), b.worker_accuracy())
+
+
+def test_single_vote_batches_keep_analytic_estimates():
+    """Regression: a repeats=1 majority batch has confidence == 1.0 and
+    every vote trivially 'agrees' with itself — folding that would
+    report a perfect crowd (0.0 residual, 1.0 worker accuracy) for an
+    arbitrarily noisy pool.  The estimators must keep the analytic
+    prior instead."""
+    svc = make_annotation_service(10, n_workers=5, noise=0.3, repeats=1,
+                                  seed=0)
+    idx, gt = _gt(2000)
+    labels = svc.annotate(idx, gt)
+    true_err = float(np.mean(labels != gt))
+    assert true_err > 0.2                      # the pool really is noisy
+    est = svc.estimated_residual_error()
+    assert est == pytest.approx(svc.expected_quality().residual_error)
+    assert abs(est - true_err) < 0.15          # analytic, not 0.0
+    np.testing.assert_array_equal(svc.worker_accuracy(), np.ones(5))
+
+
+def test_calibrate_uses_the_real_worker_population():
+    """Regression: calibration must measure the SAME workers that answer
+    real requests (same profiles + confusion matrices), only on salted
+    vote randomness — a reseeded pool resamples the per-worker noise
+    jitter and measures a different crowd."""
+    svc = make_annotation_service(10, n_workers=5, noise=0.25,
+                                  spammer_frac=0.2, repeats=3, seed=3)
+    q = svc.calibrate(n=4096)
+    # ground truth: the real pool's own aggregated error on a fresh batch
+    idx, gt = _gt(4096, seed=77)
+    labels = svc.annotate(idx, gt)
+    real_err = float(np.mean(labels != gt))
+    assert abs(q.residual_error - real_err) < 0.02
+    # and the calibration stream is disjoint from real request draws
+    same = svc.pool.annotate(idx[:500], gt[:500], 0)
+    from repro.annotation.oracle import AnnotatorPool
+    salted = AnnotatorPool(svc.pool.cfg, draw_salt=0x5CA1AB1E)
+    np.testing.assert_array_equal(salted.confusion, svc.pool.confusion)
+    assert not np.array_equal(salted.annotate(idx[:500], gt[:500], 0),
+                              same)
+
+
+def test_calibrate_measures_quality_without_side_effects():
+    """calibrate() reports the residual error the policy actually
+    delivers (sharper than the analytic majority bound for DS +
+    adaptive) and leaves the service's cursor/ledger/stats untouched —
+    and it is deterministic, so resumed campaigns rebuild the identical
+    label_quality config."""
+    svc = make_annotation_service(10, n_workers=5, noise=0.15,
+                                  spammer_frac=0.2, repeats=2,
+                                  max_repeats=4, adaptive=True,
+                                  aggregator="ds", seed=0)
+    q1 = svc.calibrate()
+    assert svc.votes_bought == 0 and svc.request_cursor == 0
+    assert svc.ledger.human == 0.0 and svc._conf_n == 0
+    q2 = svc.calibrate()
+    assert q1 == q2                       # deterministic
+    assert 2.0 <= q1.avg_repeats <= 4.0   # adaptive top-ups measured
+    # DS + adaptive beats the plain-majority analytic bound here
+    assert q1.residual_error < svc.expected_quality().residual_error
+    # and it tracks the error a real batch of this policy actually makes
+    idx, gt = _gt(3000, seed=9)
+    labels = svc.annotate(idx, gt)
+    assert abs(q1.residual_error - np.mean(labels != gt)) < 0.05
+
+
+def test_service_quality_estimates():
+    svc = make_annotation_service(10, n_workers=5, noise=0.2, repeats=3,
+                                  seed=0)
+    q = svc.expected_quality()
+    assert q.avg_repeats == 3.0
+    assert 0.0 < q.residual_error < 0.5
+    # before any batch: the analytic estimate; after: the posterior proxy
+    assert svc.estimated_residual_error() == pytest.approx(q.residual_error)
+    idx, gt = _gt(1000)
+    labels = svc.annotate(idx, gt)
+    est = svc.estimated_residual_error()
+    true_err = float(np.mean(labels != gt))
+    assert abs(est - true_err) < 0.15
+    acc = svc.worker_accuracy()
+    assert acc.shape == (5,) and np.all((0 <= acc) & (acc <= 1))
+
+
+# ---------------------------------------------------------------------------
+# campaign integration (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+
+def _noisy_task(pool_size=4000, *, noise=0.2, repeats=3, seed=0,
+                aggregator="majority", adaptive=False, max_repeats=None,
+                service=None):
+    from repro.core import AMAZON, make_emulated_task
+    t = make_emulated_task("cifar10", "resnet18", seed=0,
+                           pool_size=pool_size, sweep_page=512)
+    t.annotation = make_annotation_service(
+        t.num_classes, n_workers=5, noise=noise, repeats=repeats,
+        max_repeats=max_repeats, adaptive=adaptive, aggregator=aggregator,
+        pricing=service or AMAZON, seed=seed)
+    return t
+
+
+def test_noisy_campaign_end_to_end_margin_noise02_repeats3():
+    """The acceptance scenario: --metric margin --annotator-noise 0.2
+    --label-repeats 3 — the campaign finishes, meets the accuracy target
+    once the residual aggregated-label error is accounted for, and the
+    ledger charges repeats-inclusive human cost."""
+    from repro.core import AMAZON, MCALCampaign, MCALConfig
+    task = _noisy_task()
+    lq = task.annotation.expected_quality()
+    cfg = MCALConfig(seed=0, metric="margin", label_quality=lq)
+    camp = MCALCampaign(task, AMAZON, cfg)
+    camp.bootstrap()
+    while not camp.done:
+        camp.iteration()
+    res = camp.commit()
+    # every row labeled, error within target + the labels' own residual
+    assert np.all(res.labels >= 0)
+    assert res.measured_error <= cfg.eps_target + lq.residual_error
+    # repeats-inclusive economics: every vote charged at the tier rate
+    led = camp.pool.ledger
+    assert led.human_votes == task.annotation.votes_bought
+    assert led.human_votes == 3 * led.human_labels
+    assert led.human == pytest.approx(led.human_votes *
+                                      AMAZON.price_per_label)
+    assert res.ledger["human_votes"] == led.human_votes
+
+
+def test_noisy_campaign_hybrid_reaches_adjusted_target():
+    """With a budget for the residual (eps 0.1, light noise) the noisy
+    campaign still machine-labels a meaningful slice and the TRUE error
+    honors the target with the residual folded in."""
+    from repro.core import AMAZON, MCALCampaign, MCALConfig
+    task = _noisy_task(noise=0.1, aggregator="ds")
+    lq = task.annotation.expected_quality()
+    cfg = MCALConfig(seed=0, eps_target=0.1, label_quality=lq)
+    camp = MCALCampaign(task, AMAZON, cfg)
+    camp.bootstrap()
+    while not camp.done:
+        camp.iteration()
+    res = camp.commit()
+    assert res.decision == "hybrid" and res.S_size > 0
+    assert res.measured_error <= cfg.eps_target + lq.residual_error
+
+
+def test_commit_evaluation_oracle_buys_no_votes():
+    """Regression (the pricing-bypass bug): commit()'s ground-truth
+    evaluation used task.human_label, which with an annotation service
+    attached would consume pool-size annotation requests NEVER charged
+    through CostLedger.pay_human (and corrupt measured_error with vote
+    noise).  Every vote the service sells must now land in the campaign
+    ledger."""
+    from repro.core import AMAZON, MCALCampaign, MCALConfig
+    task = _noisy_task(pool_size=2000)
+    cfg = MCALConfig(seed=0,
+                     label_quality=task.annotation.expected_quality())
+    camp = MCALCampaign(task, AMAZON, cfg)
+    camp.bootstrap()
+    while not camp.done:
+        camp.iteration()
+    camp.commit()
+    svc = task.annotation
+    led = camp.pool.ledger
+    # no free/evaluation request ever hit the service...
+    assert svc.votes_bought == led.human_votes
+    # ...and everything the service sold was paid for at the tier rate
+    assert led.human == pytest.approx(
+        svc.pricing.cost(svc.votes_bought))
+
+
+def test_noisy_campaign_tiered_service_charges_boundaries():
+    """Tier boundaries are honored across the whole campaign: total human
+    spend equals the piecewise integral of the tier schedule over the
+    cumulative vote count."""
+    from repro.core import MCALCampaign, MCALConfig
+    tiered = LabelingService("tiered", 0.04,
+                             tiers=((0, 0.04), (2000, 0.02), (6000, 0.01)))
+    task = _noisy_task(pool_size=2000, service=tiered)
+    cfg = MCALConfig(seed=0,
+                     label_quality=task.annotation.expected_quality())
+    camp = MCALCampaign(task, tiered, cfg)
+    camp.bootstrap()
+    while not camp.done:
+        camp.iteration()
+    camp.commit()
+    led = camp.pool.ledger
+    assert led.human == pytest.approx(tiered.cost(led.human_votes))
+    assert led.human < led.human_votes * 0.04   # the discount really bit
+
+
+def test_noisy_campaign_resumes_bit_identically(tmp_path):
+    """Launcher-level: a preempted noisy-oracle campaign (annotation
+    state in --state) finishes with the exact labels, votes, and ledger
+    of an uninterrupted run."""
+    import os
+
+    from repro.core import AMAZON, MCALConfig
+    from repro.launch.label import run_campaign
+
+    cfg = MCALConfig(seed=0, metric="margin")
+
+    def task():
+        return _noisy_task(adaptive=True, repeats=2, max_repeats=4,
+                           aggregator="ds")
+
+    t0 = task()
+    cfg = MCALConfig(seed=0, metric="margin",
+                     label_quality=t0.annotation.expected_quality())
+    plain, plain_camp = run_campaign(t0, AMAZON, cfg)
+
+    state = str(tmp_path / "state.json")
+    res, camp, hops = None, None, 0
+    t1 = None
+    while res is None:
+        t1 = task()
+        res, camp = run_campaign(t1, AMAZON, cfg, state_path=state,
+                                 iters_per_run=2)
+        hops += 1
+        assert hops < 50
+    assert hops > 1 and not os.path.exists(state)
+    np.testing.assert_array_equal(res.labels, plain.labels)
+    assert res.total_cost == pytest.approx(plain.total_cost, rel=1e-12)
+    assert t1.annotation.votes_bought == t0.annotation.votes_bought
+    assert t1.annotation.request_cursor == t0.annotation.request_cursor
+    assert camp.pool.ledger.human_votes == plain_camp.pool.ledger.human_votes
+
+
+def test_aggregators_constant_matches_service_module():
+    from repro.launch.label import AGGREGATE_CHOICES
+    assert set(AGGREGATE_CHOICES) == set(AGGREGATORS)

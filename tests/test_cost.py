@@ -85,3 +85,109 @@ def test_ledger():
     assert led.human == pytest.approx(100 * 0.04 + 100 * 0.003)
     assert led.total == pytest.approx(led.human + 1.5)
     assert led.human_labels == 200
+    assert led.human_votes == 200   # one vote per label by default
+
+
+def test_pay_human_zero_is_free():
+    led = CostLedger()
+    assert led.pay_human(0, AMAZON) == 0.0
+    assert led.pay_human(0, AMAZON, repeats=7) == 0.0
+    assert led.human == 0.0 and led.human_labels == 0
+    assert led.human_votes == 0
+
+
+def test_pay_human_repeats_multiplies_pricing():
+    led = CostLedger()
+    c = led.pay_human(100, AMAZON, repeats=3)
+    assert c == pytest.approx(300 * 0.04)
+    assert led.human_labels == 100 and led.human_votes == 300
+    # exact vote counts (adaptive policies) override uniform repeats
+    led.pay_human(10, AMAZON, votes=37)
+    assert led.human_votes == 337
+    assert led.human == pytest.approx(337 * 0.04)
+    # top-up rounds buy votes for already-counted labels
+    led.pay_votes(13, AMAZON)
+    assert led.human_labels == 110 and led.human_votes == 350
+    assert led.human == pytest.approx(350 * 0.04)
+
+
+TIERED = LabelingService("tiered", 0.05,
+                         tiers=((0, 0.05), (100, 0.02), (1000, 0.01)))
+
+
+@pytest.mark.parametrize("n,start,expect", [
+    (0, 0, 0.0),
+    (100, 0, 100 * 0.05),             # exactly up to the boundary
+    (101, 0, 100 * 0.05 + 0.02),      # one request past it
+    (50, 75, 25 * 0.05 + 25 * 0.02),  # straddling mid-batch
+    (10, 100, 10 * 0.02),             # starting exactly on the boundary
+    (2000, 0, 100 * 0.05 + 900 * 0.02 + 1000 * 0.01),  # across both
+    (5, 5000, 5 * 0.01),              # deep in the last tier
+])
+def test_tier_boundaries(n, start, expect):
+    assert TIERED.cost(n, start=start) == pytest.approx(expect)
+
+
+def test_tiered_ledger_threads_cumulative_volume():
+    """Tier discounts apply against the CUMULATIVE request count — two
+    50-vote batches price like one 100-vote batch."""
+    led = CostLedger()
+    led.pay_human(60, TIERED)
+    led.pay_human(60, TIERED)
+    assert led.human == pytest.approx(TIERED.cost(120))
+    assert led.human == pytest.approx(100 * 0.05 + 20 * 0.02)
+
+
+def test_untier_service_cost_ignores_start():
+    assert AMAZON.cost(10, start=999999) == pytest.approx(10 * 0.04)
+
+
+def test_service_scaled_prices_repeats():
+    eff = AMAZON.scaled(3.0)
+    assert eff.price_per_label == pytest.approx(0.12)
+    assert AMAZON.scaled(1.0) is AMAZON
+
+
+def test_tiers_must_be_sorted():
+    with pytest.raises(AssertionError):
+        LabelingService("bad", 0.05, tiers=((100, 0.02), (0, 0.05)))
+
+
+def test_ledger_as_dict_roundtrip():
+    led = CostLedger()
+    led.pay_human(100, TIERED, repeats=3)
+    led.pay_training(2.5)
+    back = CostLedger.from_dict(led.as_dict())
+    assert back == led
+    # snapshot = as_dict + derived total (the report shape)
+    assert led.snapshot() == dict(led.as_dict(), total=led.total)
+    # pre-annotation checkpoints lack human_votes: one vote per label
+    legacy = {"human": 4.0, "training": 1.0, "human_labels": 100}
+    old = CostLedger.from_dict(legacy)
+    assert old.human_votes == 100
+
+
+def test_ledger_roundtrips_through_campaign_state_dict():
+    """The ledger (votes included) survives campaign state_dict /
+    load_state_dict — the persistence path preempted noisy-oracle
+    campaigns rely on."""
+    import json
+
+    from repro.core import AMAZON, MCALCampaign, MCALConfig, \
+        make_emulated_task
+
+    def fresh():
+        return MCALCampaign(
+            make_emulated_task("cifar10", "resnet18", seed=0,
+                               pool_size=2000, sweep_page=512),
+            AMAZON, MCALConfig(seed=0, max_iters=2))
+
+    ref = fresh()
+    ref.bootstrap()
+    ref.iteration()
+    blob = json.loads(json.dumps(ref.state_dict()))
+    assert set(blob["ledger"]) == {"human", "training", "human_labels",
+                                   "human_votes"}
+    resumed = fresh()
+    resumed.load_state_dict(blob)
+    assert resumed.pool.ledger == ref.pool.ledger

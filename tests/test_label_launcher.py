@@ -59,6 +59,90 @@ def test_launcher_state_flags():
     assert args.iters_per_run == 2
 
 
+def test_launcher_annotation_flags():
+    args = build_parser().parse_args([])
+    assert args.annotator_noise == 0.0 and args.annotator_workers == 5
+    assert args.label_repeats == 1 and not args.adaptive_repeats
+    assert args.annotator_aggregate == "majority" and args.max_repeats == 0
+    args = build_parser().parse_args(
+        ["--annotator-noise", "0.2", "--label-repeats", "3",
+         "--annotator-workers", "7", "--annotator-spammers", "0.1",
+         "--annotator-aggregate", "ds", "--adaptive-repeats",
+         "--max-repeats", "5", "--repeat-confidence", "0.8"])
+    assert args.annotator_noise == 0.2 and args.label_repeats == 3
+    assert args.annotator_workers == 7 and args.annotator_spammers == 0.1
+    assert args.annotator_aggregate == "ds" and args.adaptive_repeats
+    assert args.max_repeats == 5 and args.repeat_confidence == 0.8
+
+
+def test_launcher_rejects_unknown_aggregator():
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["--annotator-aggregate", "mode"])
+
+
+def test_build_annotation_off_for_perfect_oracle():
+    from repro.core import AMAZON
+    from repro.launch.label import build_annotation
+    args = build_parser().parse_args([])
+    assert build_annotation(args, 10, AMAZON) is None
+
+
+def test_build_annotation_constructs_service():
+    from repro.core import AMAZON
+    from repro.launch.label import build_annotation
+    args = build_parser().parse_args(
+        ["--annotator-noise", "0.2", "--label-repeats", "3",
+         "--annotator-aggregate", "ds"])
+    svc = build_annotation(args, 10, AMAZON)
+    assert svc is not None
+    assert svc.policy.repeats == 3 and svc.policy.aggregator == "ds"
+    assert svc.pricing is AMAZON
+    assert svc.pool.cfg.num_classes == 10
+    q = svc.expected_quality()
+    assert q.avg_repeats == 3.0 and q.residual_error > 0.0
+    # repeats alone (no noise) still needs the service: votes are charged
+    args = build_parser().parse_args(["--label-repeats", "2"])
+    assert build_annotation(args, 10, AMAZON) is not None
+
+
+def test_launcher_mesh_flag_and_parse():
+    from repro.launch.label import build_mesh
+    args = build_parser().parse_args([])
+    assert args.mesh == "" and build_mesh("") is None
+    args = build_parser().parse_args(["--mesh", "data=1"])
+    assert args.mesh == "data=1"
+    mesh = build_mesh("data=1")
+    assert mesh.axis_names == ("data",)
+    assert mesh.devices.shape == (1,)
+
+
+def test_mesh_campaign_smoke_under_forced_host_devices(tmp_path):
+    """ROADMAP open item: --mesh data=N builds the host mesh and hands it
+    to the scoring + fit engines.  One live iteration under 4 forced host
+    devices must run and checkpoint (subprocess: device count is fixed at
+    first jax init, so the flag cannot be set in-process)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    state = tmp_path / "mesh_state.json"
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=4"),
+               PYTHONPATH="src" + os.pathsep +
+               os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.label", "--live",
+         "--pool", "400", "--classes", "4", "--mesh", "data=4",
+         "--iters-per-run", "1", "--state", str(state)],
+        env=env, capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    report = json.loads(out.stdout)
+    assert report["resumable"] and os.path.exists(state)
+
+
 def test_run_campaign_state_file_preempt_and_resume(tmp_path):
     """Launcher-level fault tolerance: a campaign preempted by
     --iters-per-run resumes from its --state file and finishes with the
