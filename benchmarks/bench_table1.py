@@ -3,14 +3,17 @@ services, with architecture selection (the "DNN Selected" column).
 
 Paper numbers (Amazon): fashion $400/86%, cifar10 $792/67%,
 cifar100 $1698/29%; Res18 selected everywhere.
+
+Campaign cells run through ``common.mcal_cell`` — with ``--from-trace
+DIR`` they are reproduced from stored traces (replay, no recompute)
+when present; the architecture-selection rows drive several coupled
+campaigns over a shared pool and always run live.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Row, timed
+from benchmarks.common import Row, add_trace_arg, mcal_cell, timed
 from repro.core import (AMAZON, SATYAM, MCALConfig, make_emulated_task,
-                        run_mcal, select_architecture)
+                        select_architecture)
 from repro.core.emulator import DATASETS
 
 PAPER = {  # (service, dataset) -> (cost, savings)
@@ -23,21 +26,25 @@ PAPER = {  # (service, dataset) -> (cost, savings)
 }
 
 
-def run():
+def run(trace_dir=None):
     rows = []
     for service in (AMAZON, SATYAM):
         for ds in ("fashion", "cifar10", "cifar100"):
-            task = make_emulated_task(ds, "resnet18", seed=0)
-            res, us = timed(run_mcal, task, service, MCALConfig(seed=0))
+            res, us, src = mcal_cell(
+                f"tbl1_{service.name}_{ds}",
+                lambda ds=ds: make_emulated_task(ds, "resnet18", seed=0),
+                service, MCALConfig(seed=0), trace_dir=trace_dir)
             full = DATASETS[ds]["full"] * service.price_per_label
             save = 1 - res.total_cost / full
             p_cost, p_save = PAPER[(service.name, ds)]
             rows.append(Row(
                 f"tbl1_{service.name}_{ds}", us,
                 f"cost=${res.total_cost:.0f};save={save:.1%};"
-                f"err={res.measured_error:.3f};paper=${p_cost}/{p_save:.0%}"))
+                f"err={res.measured_error:.3f};paper=${p_cost}/{p_save:.0%}",
+                meta={"source": src}))
 
-    # arch selection (Fig. 7 bars / "DNN Selected")
+    # arch selection (Fig. 7 bars / "DNN Selected") — several campaigns
+    # coupled through one shared pool: always live
     for ds in ("fashion", "cifar10", "cifar100"):
         tasks = {a: make_emulated_task(ds, a, seed=0)
                  for a in ("cnn18", "resnet18", "resnet50")}
@@ -51,5 +58,8 @@ def run():
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    add_trace_arg(ap)
+    for r in run(trace_dir=ap.parse_args().from_trace):
         print(r.csv())

@@ -3,20 +3,26 @@
 For each (dataset x architecture): sweep delta, report the oracle's best
 delta + cost + savings vs full human labeling — and confirm MCAL's Tbl. 1
 cost beats every oracle-AL cell (the paper's headline comparison).
+
+The per-dataset MCAL reference campaign runs through ``common.mcal_cell``
+(``--from-trace DIR`` replays it from a stored trace); the oracle-AL
+delta sweeps are baseline grids, not campaigns, and always run live.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, timed
-from repro.core import AMAZON, MCALConfig, make_emulated_task, run_mcal
+from benchmarks.common import Row, add_trace_arg, mcal_cell, timed
+from repro.core import AMAZON, MCALConfig, make_emulated_task
 from repro.core.baselines import oracle_al
 from repro.core.emulator import DATASETS
 
 
-def run():
+def run(trace_dir=None):
     rows = []
     for ds in ("fashion", "cifar10", "cifar100"):
-        task = make_emulated_task(ds, "resnet18", seed=0)
-        mcal = run_mcal(task, AMAZON, MCALConfig(seed=0))
+        mcal, _, src = mcal_cell(
+            f"tbl2_{ds}_mcal",
+            lambda ds=ds: make_emulated_task(ds, "resnet18", seed=0),
+            AMAZON, MCALConfig(seed=0), trace_dir=trace_dir)
         full = DATASETS[ds]["full"] * AMAZON.price_per_label
         for arch in ("cnn18", "resnet18", "resnet50"):
             (best_d, best, _), us = timed(
@@ -26,10 +32,14 @@ def run():
                 f"tbl2_{ds}_{arch}", us,
                 f"delta_opt={best_d};cost=${best.cost:.0f};"
                 f"save={1 - best.cost / full:.1%};"
-                f"mcal_cheaper={mcal.total_cost <= best.cost * 1.001}"))
+                f"mcal_cheaper={mcal.total_cost <= best.cost * 1.001}",
+                meta={"mcal_source": src}))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    add_trace_arg(ap)
+    for r in run(trace_dir=ap.parse_args().from_trace):
         print(r.csv())

@@ -1,0 +1,94 @@
+"""Trace-store benchmark: hot-path overhead + replay fidelity.
+
+Two gated claims about the campaign event bus:
+
+* tracing is effectively free on the live path — a fully traced noisy
+  adaptive-repeats campaign (every charge, vote round, measurement, fit,
+  search, iteration, and commit emitted) must run within 5% of the
+  identical untraced campaign (best-of-N wall clock on both legs);
+* the trace IS the campaign — replaying it must reproduce the exact
+  total cost, iteration count, and decision with zero engine recompute.
+
+The smoke leg leaves its trace at ``TRACE_smoke.jsonl`` so CI uploads it
+as a workflow artifact next to ``BENCH_*.json``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed, timed_best
+
+OVERHEAD_GATE = 0.05            # traced/untraced - 1, enforced in smoke
+TRACE_PATH = "TRACE_smoke.jsonl"
+POOL = 20000
+
+
+def _campaign(trace_path=None):
+    """One noisy adaptive-repeats emulated campaign; returns MCALResult.
+    Fresh task + annotation service per call (both are stateful)."""
+    from repro.annotation import make_annotation_service
+    from repro.core import AMAZON, MCALConfig, make_emulated_task
+    from repro.core.mcal import MCALCampaign
+
+    ann = make_annotation_service(
+        10, noise=0.2, repeats=3, max_repeats=5, adaptive=True,
+        aggregator="ds", pricing=AMAZON, seed=0)
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=POOL)
+    task.annotation = ann
+    cfg = MCALConfig(seed=0, label_quality=ann.expected_quality())
+    camp = MCALCampaign(task, AMAZON, cfg)
+    if trace_path is None:
+        return camp.run()
+    from repro.trace import TraceStore
+    with TraceStore(trace_path, "smoke-noisy-s0") as tr:
+        camp.attach_trace(tr)
+        return camp.run()
+
+
+def run_smoke(enforce: bool = True, repeat: int = 3):
+    from repro.trace import read_trace, replay
+
+    res_plain, plain_us = timed_best(_campaign, repeat=repeat)
+    res_traced, traced_us = timed_best(_campaign, TRACE_PATH,
+                                       repeat=repeat)
+    assert res_traced.total_cost == res_plain.total_cost, \
+        "attaching a trace changed the campaign's decisions"
+    overhead = traced_us / plain_us - 1.0
+
+    rp, replay_us = timed(replay, TRACE_PATH)
+    match = (rp.total_cost == res_traced.total_cost
+             and len(rp.history) == len(res_traced.history)
+             and rp.decision == res_traced.decision
+             and rp.votes == res_traced.ledger["human_votes"])
+    if enforce:
+        assert match, (
+            f"replay diverged from live: ${rp.total_cost} vs "
+            f"${res_traced.total_cost}, {len(rp.history)} vs "
+            f"{len(res_traced.history)} iterations")
+        assert overhead <= OVERHEAD_GATE, (
+            f"trace overhead {overhead:.1%} exceeds the "
+            f"{OVERHEAD_GATE:.0%} gate "
+            f"({traced_us:.0f}us traced vs {plain_us:.0f}us untraced)")
+
+    n_events = len(read_trace(TRACE_PATH))
+    return [
+        Row("trace_overhead", traced_us,
+            f"overhead={overhead:+.1%};gate<={OVERHEAD_GATE:.0%};"
+            f"untraced_us={plain_us:.0f};events={n_events}",
+            meta={"overhead": overhead, "pool": POOL,
+                  "events": n_events, "artifact": TRACE_PATH}),
+        Row("trace_replay", replay_us,
+            f"cost=${rp.total_cost:.0f};iters={len(rp.history)};"
+            f"votes={rp.votes};replay_match={match}",
+            meta={"replay_match": bool(match)}),
+    ]
+
+
+def run():
+    """Full-suite leg: same measurement, gates reported but not
+    enforced (the smoke leg is the enforcing one)."""
+    return run_smoke(enforce=False)
+
+
+if __name__ == "__main__":
+    for r in run_smoke():
+        print(r.csv())

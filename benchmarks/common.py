@@ -1,16 +1,25 @@
-"""Shared benchmark plumbing: timing + CSV rows.
+"""Shared benchmark plumbing: timing + CSV rows + the trace-aware MCAL
+cell runner.
 
 Every benchmark module exposes ``run() -> list[Row]``; ``benchmarks.run``
 aggregates them into the ``name,us_per_call,derived`` CSV the harness
 expects (us_per_call times the benchmark's core computation; ``derived``
 carries the headline metric the paper table/figure reports).
+
+Paper-table modules (``bench_table{1,2,3}``) drive their campaign cells
+through :func:`mcal_cell`, which accepts a ``--from-trace DIR``: a cell
+whose trace exists under the directory is REPRODUCED from the trace
+alone (replay, zero engine recompute); otherwise the cell runs live —
+and when the directory is set, the live run also writes its trace there
+and asserts the replayed totals match the live ones before reporting.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -58,3 +67,54 @@ def timed_best(fn: Callable, *args, repeat: int = 3, **kw):
         out = fn(*args, **kw)
         best = min(best, time.perf_counter() - t0)
     return out, best * 1e6
+
+
+def mcal_cell(name: str, make_task: Callable, service, cfg, *,
+              trace_dir: Optional[str] = None) -> Tuple[object, float, str]:
+    """Run one paper-table MCAL cell, trace-aware.  Returns
+    ``(MCALResult, us, source)`` where source is ``"replay"`` (cell
+    reproduced from ``trace_dir/<name>.jsonl`` with zero engine
+    recompute) or ``"live"``.  A live run with ``trace_dir`` set writes
+    its trace there and asserts the replayed totals match the live
+    result before returning — every stored table cell is replay-verified
+    at creation."""
+    from repro.trace import replay
+    path = os.path.join(trace_dir, f"{name}.jsonl") if trace_dir else None
+    if path and os.path.exists(path):
+        rp, us = timed(replay, path)
+        if rp.result is None:
+            raise AssertionError(
+                f"{name}: stored trace {path} has no commit event — "
+                f"a preempted campaign cannot reproduce a table cell")
+        return rp.result, us, "replay"
+
+    from repro.core.mcal import MCALCampaign
+
+    def live():
+        camp = MCALCampaign(make_task(), service, cfg)
+        if path:
+            from repro.trace import TraceStore
+            os.makedirs(trace_dir, exist_ok=True)
+            with TraceStore(path, name) as tr:
+                camp.attach_trace(tr)
+                return camp.run()
+        return camp.run()
+
+    res, us = timed(live)
+    if path:
+        rp = replay(path)
+        if rp.total_cost != res.total_cost or \
+                len(rp.history) != len(res.history):
+            raise AssertionError(
+                f"{name}: replayed trace diverges from the live run "
+                f"(cost ${rp.total_cost} vs ${res.total_cost}, "
+                f"{len(rp.history)} vs {len(res.history)} iterations)")
+    return res, us, "live"
+
+
+def add_trace_arg(ap) -> None:
+    """The table modules' shared ``--from-trace DIR`` flag."""
+    ap.add_argument("--from-trace", default=None, metavar="DIR",
+                    help="reproduce campaign cells from stored traces in "
+                         "DIR when present; run live (and record the "
+                         "trace there, replay-verified) otherwise")

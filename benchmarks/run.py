@@ -15,6 +15,9 @@
   bench_sweep              streaming pool-sweep runtime (>= 2x gate)
   bench_fit                fused retrain engine (>= 2x gate, exact params)
   bench_annotation         device Dawid-Skene EM (>= 2x gate, exact argmax)
+  bench_trace              campaign event bus (<= 5% overhead gate +
+                           replay-equals-live; smoke leaves
+                           TRACE_smoke.jsonl as a CI artifact)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
@@ -35,6 +38,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import sys
 import time
@@ -55,6 +59,7 @@ MODULES = (
     "bench_sweep",
     "bench_fit",
     "bench_annotation",
+    "bench_trace",
 )
 
 
@@ -84,7 +89,7 @@ def run_smoke():
     benchmarks with their speedup gates ENFORCED (a gate miss fails the
     job).  Returns (status, rows, errors)."""
     from benchmarks import (bench_annotation, bench_fit, bench_selection,
-                            bench_sweep)
+                            bench_sweep, bench_trace)
 
     print("name,us_per_call,derived")
     status, rows, errors = 0, [], []
@@ -96,6 +101,7 @@ def run_smoke():
         ("bench_selection[kcenter]",
          lambda: bench_selection.run_kcenter(enforce=True)),
         ("bench_annotation[smoke]", bench_annotation.run_smoke),
+        ("bench_trace[smoke]", bench_trace.run_smoke),
     ):
         try:
             for row in fn():
@@ -122,6 +128,11 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="path for the machine-readable record "
                          "(default: BENCH_<run>.json)")
+    ap.add_argument("--from-trace", default="", metavar="DIR",
+                    help="reproduce paper-table campaign cells from "
+                         "stored traces in DIR when present (modules "
+                         "that support it replay instead of re-running; "
+                         "live cells record their trace there)")
     args = ap.parse_args()
 
     def finish(mode: str, status: int, rows, errors):
@@ -141,7 +152,11 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            for row in mod.run():
+            kw = {}
+            if args.from_trace and \
+                    "trace_dir" in inspect.signature(mod.run).parameters:
+                kw["trace_dir"] = args.from_trace
+            for row in mod.run(**kw):
                 rows.append(row)
                 print(row.csv(), flush=True)
         except Exception as e:

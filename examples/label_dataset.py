@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/label_dataset.py
     PYTHONPATH=src python examples/label_dataset.py --noisy
+    PYTHONPATH=src python examples/label_dataset.py --trace run.jsonl
 
 Everything is live: a JAX MLP classifier is (re)trained by the framework's
 own train loop on every MCAL iteration, the pool is scored with the
@@ -17,6 +18,14 @@ adaptive-repeats policy (extra votes only for items whose aggregated
 posterior is still unsure — Liao et al.'s good practice), every vote
 charged at the service rate, and the campaign folding the residual
 aggregated-label error into its accuracy target.
+
+``--trace run.jsonl`` additionally records the campaign's full event
+stream (every charge, fit, search, acquisition, iteration, commit) to an
+append-only trace — watch it live with ``python -m repro.launch.report
+run.jsonl --watch 2``, replay it without recompute via ``python -m
+repro.launch.label --trace-replay run.jsonl``, or diff it against a
+sibling run with ``--trace-diff``.  The full launcher
+(``repro.launch.label``) takes the same ``--trace PATH`` flag.
 """
 import sys
 
@@ -26,6 +35,8 @@ from repro.core import AMAZON, LiveTask, MCALConfig, run_mcal
 from repro.data.synth import make_classification
 
 NOISY = "--noisy" in sys.argv
+TRACE = (sys.argv[sys.argv.index("--trace") + 1]
+         if "--trace" in sys.argv else "")
 POOL, CLASSES, DIM = 6_000, 10, 32
 
 print(f"generating a {POOL:,}-sample / {CLASSES}-class pool "
@@ -55,7 +66,14 @@ task = LiveTask(features=x, groundtruth=y, num_classes=CLASSES,
 print("running MCAL (real training per iteration) ...")
 cfg = MCALConfig(eps_target=eps_target, delta0_frac=0.02, max_iters=25,
                  seed=0, label_quality=q if annotation else None)
-result = run_mcal(task, AMAZON, cfg)
+if TRACE:
+    from repro.trace import TraceStore
+    with TraceStore(TRACE, "example-live-s0") as tr:
+        result = run_mcal(task, AMAZON, cfg, trace=tr)
+    print(f"trace          : {TRACE} (replay: python -m "
+          f"repro.launch.label --trace-replay {TRACE})")
+else:
+    result = run_mcal(task, AMAZON, cfg)
 
 human_all = POOL * AMAZON.price_per_label
 bound = eps_target

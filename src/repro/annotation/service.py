@@ -117,6 +117,7 @@ class AnnotationService:
         self.budget = budget
         self.aggregator = VoteAggregator(pool.cfg.num_classes, agg_cfg)
         self.ledger = CostLedger()             # the service budget ledger
+        self.trace = None                      # campaign event bus (attach_trace)
         # -- persisted runtime state (state_dict) --------------------------
         self._cursor = 0                       # request-batch counter: the
         #                                        worker-schedule offset
@@ -135,6 +136,19 @@ class AnnotationService:
         # bought delta of its own call, so interleaving purchases from a
         # second ledger against one service is not a supported shape.)
         self._lock = threading.Lock()
+
+    def attach_trace(self, trace) -> None:
+        """Wire the campaign event bus through the broker: every service-
+        ledger charge emits (as ledger="service", distinct from the
+        campaign ledger's stream), and each request batch emits its vote
+        rounds, adaptive top-ups, and an annotator-quality snapshot."""
+        self.trace = trace
+        self.ledger.trace = trace
+        self.ledger.trace_name = "service"
+
+    def _emit(self, kind: str, **payload) -> None:
+        if self.trace is not None:
+            self.trace.emit(kind, **payload)
 
     # -- introspection -----------------------------------------------------
     @property
@@ -270,6 +284,9 @@ class AnnotationService:
         # matrices campaigns aggregate through the same method)
         votes = self.pool.vote_matrix(idx, true, pol.repeats, base)
         self.ledger.pay_human(N, self.pricing, votes=N * pol.repeats)
+        self._emit("vote_round", n=int(N), repeats=int(pol.repeats),
+                   votes=int(N * pol.repeats), cursor=int(base),
+                   aggregator=pol.aggregator)
         labels, conf, ds = self.aggregator.aggregate(votes, pol.aggregator)
         if pol.adaptive:
             rows = np.arange(N)
@@ -279,6 +296,8 @@ class AnnotationService:
                         not self._within_budget(len(active)):
                     break
                 self.ledger.pay_votes(len(active), self.pricing)
+                self._emit("topup", round=int(r), n=int(len(active)),
+                           cursor=int(base))
                 self._topup_round(votes, active, idx, true, base, r)
                 labels, conf, ds = self.aggregator.aggregate(
                     votes, pol.aggregator)
@@ -296,6 +315,16 @@ class AnnotationService:
             self._conf_n += N
         if ds is not None:
             self._confusion_est = np.asarray(ds.confusion, np.float64)
+        if pol.cap > 1:
+            # quality telemetry for the live report's drift view — one
+            # snapshot per statistics fold, so the trace shows the
+            # estimators converging request batch by request batch
+            self._emit("annotator_snapshot",
+                       worker_accuracy=[float(a) for a
+                                        in self.worker_accuracy()],
+                       residual_error=float(
+                           self.estimated_residual_error()),
+                       avg_repeats=float(self.avg_repeats()))
         return labels
 
     # -- the broker --------------------------------------------------------
@@ -337,6 +366,10 @@ class AnnotationService:
     def load_state_dict(self, s: Dict):
         self._cursor = int(s["cursor"])
         self.ledger = CostLedger.from_dict(s["ledger"])
+        if self.trace is not None:
+            # from_dict built a fresh ledger: re-wire the event bus
+            self.ledger.trace = self.trace
+            self.ledger.trace_name = "service"
         self._agree = np.asarray(s["agree"], np.int64)
         self._count = np.asarray(s["count"], np.int64)
         assert len(self._agree) == self.pool.n_workers, \

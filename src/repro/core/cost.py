@@ -175,12 +175,31 @@ class CostLedger:
     labeling (noisy multi-annotator oracles) one label costs several
     votes, and tier pricing is applied against the cumulative request
     count, so the ledger threads it through every charge.
+
+    When a campaign trace is attached (``trace``/``trace_name``), every
+    charge emits a ``charge`` event carrying the running balance — the
+    ledger itself is the charging site, so nothing can spend without
+    leaving an audit line.  The trace attachment is runtime wiring, not
+    account state: ``as_dict``/``from_dict`` ignore it and a restored
+    ledger must be re-attached by its owner.
     """
 
     human: float = 0.0
     training: float = 0.0
     human_labels: int = 0
     human_votes: int = 0
+    trace: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    trace_name: str = dataclasses.field(
+        default="campaign", repr=False, compare=False)
+
+    def _emit_charge(self, what: str, **extra) -> None:
+        if self.trace is not None:
+            self.trace.emit("charge", ledger=self.trace_name, what=what,
+                            human=self.human, training=self.training,
+                            human_labels=self.human_labels,
+                            human_votes=self.human_votes,
+                            total=self.total, **extra)
 
     def pay_human(self, n: int, service: LabelingService, *,
                   repeats: int = 1, votes: Optional[int] = None) -> float:
@@ -195,6 +214,7 @@ class CostLedger:
         self.human += c
         self.human_labels += max(n, 0)
         self.human_votes += v
+        self._emit_charge("human", n=max(n, 0), votes=v, cost=c)
         return c
 
     def pay_votes(self, v: int, service: LabelingService) -> float:
@@ -204,6 +224,7 @@ class CostLedger:
 
     def pay_training(self, c: float) -> float:
         self.training += c
+        self._emit_charge("training", cost=float(c))
         return c
 
     @property

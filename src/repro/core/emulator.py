@@ -57,6 +57,12 @@ class EmulatedTask:
         self.u = root.permutation(self.pool_size) / max(self.pool_size - 1, 1)
         self.labels_gt = root.integers(0, self.num_classes, self.pool_size)
         self._B = 0
+        self.trace = None   # campaign event bus (attach_trace)
+
+    def attach_trace(self, trace) -> None:
+        """Forward the campaign event bus to the per-call sweep runners
+        (this task builds one per ``machine_label_sweep``)."""
+        self.trace = trace
 
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:
@@ -119,6 +125,7 @@ class EmulatedTask:
                                          RankTop1Sink, SweepConfig)
         runner = PoolSweepRunner(HostTaskAdapter(self.score),
                                  SweepConfig(page_rows=self.sweep_page))
+        runner.trace = self.trace
         return runner.run(None, np.asarray(idx, np.int64),
                           RankTop1Sink(metric), checkpoint=checkpoint,
                           checkpoint_every=checkpoint_every,

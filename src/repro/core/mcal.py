@@ -30,6 +30,7 @@ to the budget-constrained variant (min error s.t. cost <= budget).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -39,8 +40,13 @@ from repro.core.cost import (CostLedger, LabelQuality, LabelingService,
                              TrainCostModel)
 from repro.core.powerlaw import PowerLaw, fit_power_law
 from repro.core.search import SearchResult, adapt_delta, budget_search, joint_search
+from repro.trace.store import sanitize as _trace_sanitize
 
 DEFAULT_THETAS = tuple(round(0.05 * i, 2) for i in range(1, 21))
+
+# campaign state_dict schema version.  v1: pre-trace checkpoints (no
+# version field); v2: adds "version" + the "trace" append cursor.
+STATE_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +96,33 @@ class IterationRecord:
     training_spent: float
     search: Optional[SearchResult] = None
 
+    def to_dict(self) -> Dict:
+        """JSON form — the ``iteration`` trace-event payload and the
+        ``state_dict`` history entry.  ``search`` surfaces (the optional
+        keep_surface grids) are in-memory only and never serialized."""
+        return {
+            "i": int(self.i), "B_size": int(self.B_size),
+            "delta": int(self.delta),
+            "eps_theta": {str(t): float(e)
+                          for t, e in self.eps_theta.items()},
+            "cstar": float(self.cstar), "B_opt": int(self.B_opt),
+            "theta_opt": float(self.theta_opt),
+            "feasible": bool(self.feasible), "stable": bool(self.stable),
+            "human_spent": float(self.human_spent),
+            "training_spent": float(self.training_spent)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "IterationRecord":
+        return cls(
+            i=int(d["i"]), B_size=int(d["B_size"]), delta=int(d["delta"]),
+            eps_theta={float(t): float(e)
+                       for t, e in d["eps_theta"].items()},
+            cstar=float(d["cstar"]), B_opt=int(d["B_opt"]),
+            theta_opt=float(d["theta_opt"]), feasible=bool(d["feasible"]),
+            stable=bool(d["stable"]),
+            human_spent=float(d["human_spent"]),
+            training_spent=float(d["training_spent"]))
+
 
 @dataclasses.dataclass
 class MCALResult:
@@ -107,6 +140,56 @@ class MCALResult:
     @property
     def total_cost(self) -> float:
         return self.ledger["total"]
+
+    def to_dict(self, with_history: bool = True) -> Dict:
+        """JSON form — the ``commit`` trace-event payload.  The label
+        arrays stay out (they are the campaign's product, not its
+        decision record); ``pool_size`` preserves their shape so
+        :meth:`from_dict` round-trips."""
+        d = {
+            "decision": str(self.decision), "B_size": int(self.B_size),
+            "S_size": int(self.S_size),
+            "theta_final": float(self.theta_final),
+            "measured_error": float(self.measured_error),
+            "arch_name": str(self.arch_name),
+            "pool_size": int(len(self.labels)),
+            "ledger": {k: (int(v) if isinstance(v, (int, np.integer))
+                           else float(v))
+                       for k, v in self.ledger.items()},
+        }
+        if with_history:
+            d["history"] = [r.to_dict() for r in self.history]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "MCALResult":
+        n = int(d.get("pool_size", 0))
+        return cls(
+            labels=np.full(n, -1, np.int64),
+            machine_mask=np.zeros(n, bool), ledger=dict(d["ledger"]),
+            history=[IterationRecord.from_dict(r)
+                     for r in d.get("history", [])],
+            decision=str(d["decision"]), B_size=int(d["B_size"]),
+            S_size=int(d["S_size"]),
+            theta_final=float(d["theta_final"]),
+            measured_error=float(d["measured_error"]),
+            arch_name=str(d.get("arch_name", "")))
+
+
+def _fitted_payload(laws: Dict[float, PowerLaw],
+                    cm: TrainCostModel) -> Dict:
+    """The persistable form of one round of power-law/cost fits — shared
+    by ``state_dict`` and the ``powerlaw_fit`` trace event so a replayed
+    fit is byte-identical to a checkpointed one."""
+    return {
+        # np.inf (plain power law) is not strict JSON -> None
+        "laws": {str(t): {
+            "alpha": law.alpha, "gamma": law.gamma,
+            "k": None if not np.isfinite(law.k) else law.k,
+            "resid_std": law.resid_std, "n_points": law.n_points}
+            for t, law in laws.items()},
+        "cost_model": {"c_u": cm.c_u, "exponent": cm.exponent},
+    }
 
 
 def oracle_labels(task, idx: np.ndarray) -> np.ndarray:
@@ -194,11 +277,43 @@ class MCALCampaign:
         self.on_sweep_checkpoint = None          # callback(SweepCheckpoint)
         self.resume_sweep_checkpoint = None      # cursor to resume from
         self._iter = 0
+        # campaign event bus (attach_trace): None = tracing off
+        self.trace = None
+
+    def attach_trace(self, trace) -> None:
+        """Wire the campaign event bus through every engine family: this
+        driver's decision sites, the shared ledger's charging sites, the
+        annotation broker (vote rounds, top-ups, quality snapshots), and
+        the task's sweep/fit runtimes (cursor cuts, submit/fold
+        timestamps).  Call before ``bootstrap``/``load_state_dict`` so
+        the trace opens with the campaign's first event."""
+        self.trace = trace
+        self.pool.ledger.trace = trace
+        self.pool.ledger.trace_name = "campaign"
+        ann = getattr(self.task, "annotation", None)
+        if ann is not None and hasattr(ann, "attach_trace"):
+            ann.attach_trace(trace)
+        if hasattr(self.task, "attach_trace"):
+            self.task.attach_trace(trace)
+
+    def _emit(self, kind: str, **payload) -> None:
+        if self.trace is not None:
+            self.trace.emit(kind, **_trace_sanitize(payload))
 
     # -- bootstrap ----------------------------------------------------------
     def bootstrap(self, *, adopt: bool = False):
         X = self.task.pool_size
         p = self.pool
+        if self.trace is not None:
+            # config = campaign policy (decisions must match across
+            # sibling runs); runtime = execution mode (scheduling only,
+            # normalized out by trace diff)
+            cfgd = dataclasses.asdict(self.cfg)
+            runtime = {"sweep_async": cfgd.pop("sweep_async"),
+                       "fit_async": cfgd.pop("fit_async")}
+            self._emit("campaign_begin", config=cfgd, runtime=runtime,
+                       pool_size=int(X),
+                       arch=getattr(self.task, "arch_name", ""))
         if not adopt:
             T_size = max(int(round(self.cfg.test_frac * X)), 16)
             p.T_idx = self.rng.choice(X, T_size, replace=False)
@@ -211,6 +326,8 @@ class MCALCampaign:
             p.B_idx = b0
             p.buy_labels(self.task, b0, self.service)
         self.delta = len(p.B_idx)
+        self._emit("bootstrap", T_size=int(len(p.T_idx)),
+                   B_size=int(len(p.B_idx)), adopt=bool(adopt))
         self._train_and_measure()
 
     # -- internals ----------------------------------------------------------
@@ -263,6 +380,12 @@ class MCALCampaign:
             stats_T, correct, self.cfg.thetas, self.cfg.l_metric)
         for t, e in zip(self.cfg.thetas, curve):
             self.eps_hist[t].append((nB, float(e)))
+        # emitted at fold time on the MAIN thread (under fit_async the
+        # fold happens at the next consumer), so the decision stream is
+        # position-identical to the synchronous campaign's
+        self._emit("measure", B=int(nB),
+                   eps={str(t): float(e)
+                        for t, e in zip(self.cfg.thetas, curve)})
 
     def _sync_fit(self):
         """Fold an in-flight async retrain (``fit_async``): collect its
@@ -295,6 +418,10 @@ class MCALCampaign:
         cm = TrainCostModel(exponent=self.cfg.cost_exponent).fit(
             self.train_sizes, self.train_costs)
         self._fit_models_cache = (key, laws, cm)
+        # once per fresh measurement-history key (the memo guarantees
+        # it), so state-saving and non-saving runs emit identically
+        self._emit("powerlaw_fit", train_points=int(key[0]),
+                   **_fitted_payload(laws, cm))
         return laws, cm
 
     # -- noisy-annotation economics ---------------------------------------
@@ -317,14 +444,23 @@ class MCALCampaign:
                   laws=laws, cost_model=cm, delta=self.delta,
                   service=self._effective_service())
         if self.cfg.budget is not None:
-            return budget_search(budget=self.cfg.budget, **kw)
-        # residual aggregated-label error eats into the target: even a
-        # perfect classifier measured against service labels cannot beat
-        # the annotators, so the machine-label slice must clear the rest
-        return joint_search(
-            eps_target=self._quality().effective_target(self.cfg.eps_target),
-            keep_surface=self.cfg.keep_surface
-            if keep_surface is None else keep_surface, **kw)
+            res = budget_search(budget=self.cfg.budget, **kw)
+        else:
+            # residual aggregated-label error eats into the target: even
+            # a perfect classifier measured against service labels cannot
+            # beat the annotators, so the machine-label slice must clear
+            # the rest
+            res = joint_search(
+                eps_target=self._quality().effective_target(
+                    self.cfg.eps_target),
+                keep_surface=self.cfg.keep_surface
+                if keep_surface is None else keep_surface, **kw)
+        self._emit("search", cost=res.cost, B_opt=int(res.B_opt),
+                   theta_opt=float(res.theta_opt),
+                   machine_labeled=int(res.machine_labeled),
+                   feasible=bool(res.feasible),
+                   human_all_cost=res.human_all_cost)
+        return res
 
     # -- one loop body --------------------------------------------------------
     def iteration(self, *, acquire: bool = True,
@@ -369,6 +505,7 @@ class MCALCampaign:
             human_spent=p.ledger.human, training_spent=p.ledger.training,
             search=res if self.cfg.keep_surface else None)
         self.history.append(rec)
+        self._emit("iteration", **rec.to_dict())
         self._iter += 1
 
         if self.cfg.budget is not None:
@@ -380,7 +517,7 @@ class MCALCampaign:
                           self._fit_models()[1].iteration_cost(
                               len(p.B_idx) + self.delta))
             if p.ledger.total + float(next_spend) > self.cfg.budget:
-                self.done = True
+                self._finish("budget")
                 self._drop_pending()
                 return rec
         else:
@@ -392,8 +529,8 @@ class MCALCampaign:
                                res.machine_labeled < self.cfg.bailout_min_s * X)
             if no_meaningful_S and \
                     p.ledger.training > self.cfg.bailout_frac * human_all:
-                self.done = True
                 self.decision = "human_all"
+                self._finish("bailout")
                 self._drop_pending()
                 return rec
 
@@ -415,12 +552,12 @@ class MCALCampaign:
         enough = len(self.train_sizes) >= self.cfg.min_fit_points
         if enough and self.stable and res.feasible and \
                 res.B_opt <= len(p.B_idx) and not self.freeze_delta:
-            self.done = True
+            self._finish("converged")
             self._drop_pending()
             return rec
 
         if self._iter >= self.cfg.max_iters:
-            self.done = True
+            self._finish("max_iters")
             self._drop_pending()
             return rec
 
@@ -438,7 +575,7 @@ class MCALCampaign:
         if len(cand) == 0:
             if pending is not None:
                 pending[1].cancel()
-            self.done = True
+            self._finish("pool_exhausted")
             return
         if forced is not None:
             if pending is not None:
@@ -458,10 +595,24 @@ class MCALCampaign:
                     pending[1].cancel()
             if pick is None:   # no sweep in flight, or delta grew past it
                 pick = self._rank_candidates(take, cand)
+        if self.trace is not None:
+            # the full index set would dominate the trace; a CRC over the
+            # ordered picks still pins the acquisition bit-exactly across
+            # sibling runs (sync vs async must select identically)
+            pick_arr = np.ascontiguousarray(np.asarray(pick, np.int64))
+            self._emit("acquisition", n=int(len(pick_arr)),
+                       digest=int(zlib.crc32(pick_arr.tobytes())),
+                       forced=bool(forced is not None))
         p.buy_labels(self.task, pick, self.service)
         p.in_B[pick] = True
         p.B_idx = np.concatenate([p.B_idx, pick])
         self._train_and_measure()
+
+    def _finish(self, reason: str):
+        """End the loop; the ``done`` event records WHY (budget | bailout
+        | converged | max_iters | pool_exhausted)."""
+        self.done = True
+        self._emit("done", reason=reason)
 
     def _drop_pending(self):
         """Cancel (best-effort) and forget an in-flight async M(.) sweep —
@@ -569,13 +720,13 @@ class MCALCampaign:
                 machine_mask[S_idx] = True
             p.buy_labels(self.task, residual, self.service)
             gt = oracle_labels(self.task, np.arange(X))
-            return MCALResult(
+            return self._emit_commit(MCALResult(
                 labels=p.labels.copy(), machine_mask=machine_mask,
                 ledger=p.ledger.snapshot(), history=self.history,
                 decision="budget", B_size=len(p.B_idx), S_size=int(m),
                 theta_final=m / max(len(remaining), 1),
                 measured_error=float(np.mean(p.labels != gt)),
-                arch_name=getattr(self.task, "arch_name", ""))
+                arch_name=getattr(self.task, "arch_name", "")))
 
         if self.decision == "human_all" or self.theta_opt <= 0.0 \
                 or len(remaining) == 0:
@@ -616,12 +767,20 @@ class MCALCampaign:
         # noisy votes (see oracle_labels)
         gt = oracle_labels(self.task, np.arange(X))
         measured_error = float(np.mean(p.labels != gt))
-        return MCALResult(
+        return self._emit_commit(MCALResult(
             labels=p.labels.copy(), machine_mask=machine_mask,
             ledger=p.ledger.snapshot(), history=self.history,
             decision=self.decision, B_size=len(p.B_idx), S_size=S_size,
             theta_final=theta_final, measured_error=measured_error,
-            arch_name=getattr(self.task, "arch_name", ""))
+            arch_name=getattr(self.task, "arch_name", "")))
+
+    def _emit_commit(self, res: MCALResult) -> MCALResult:
+        """The terminal decision event; flushed immediately — a campaign
+        that committed must never lose its commit to the write buffer."""
+        if self.trace is not None:
+            self._emit("commit", **res.to_dict(with_history=False))
+            self.trace.flush()
+        return res
 
     def run(self) -> MCALResult:
         self.bootstrap()
@@ -639,16 +798,11 @@ class MCALCampaign:
         fitted = None
         if self.train_sizes:
             laws, cm = self._fit_models()
-            fitted = {
-                # np.inf (plain power law) is not strict JSON -> None
-                "laws": {str(t): {
-                    "alpha": law.alpha, "gamma": law.gamma,
-                    "k": None if not np.isfinite(law.k) else law.k,
-                    "resid_std": law.resid_std, "n_points": law.n_points}
-                    for t, law in laws.items()},
-                "cost_model": {"c_u": cm.c_u, "exponent": cm.exponent},
-            }
-        return {
+            fitted = _fitted_payload(laws, cm)
+        state = {
+            # schema version: loaders reject anything newer than they
+            # understand instead of failing on a missing/renamed key
+            "version": STATE_VERSION,
             # fitted power-law/cost state + the engines' pack-shape compile
             # cache keys: a resumed paper-scale replay starts without
             # refits and prewarms its compiled programs upfront.
@@ -660,17 +814,7 @@ class MCALCampaign:
             # payloads) + the acquisition RNG stream: a resumed campaign
             # reports the whole trajectory and --metric random draws
             # continue where the preempted stream stopped.
-            "history": [{
-                "i": int(r.i), "B_size": int(r.B_size),
-                "delta": int(r.delta),
-                "eps_theta": {str(t): float(e)
-                              for t, e in r.eps_theta.items()},
-                "cstar": float(r.cstar), "B_opt": int(r.B_opt),
-                "theta_opt": float(r.theta_opt),
-                "feasible": bool(r.feasible), "stable": bool(r.stable),
-                "human_spent": float(r.human_spent),
-                "training_spent": float(r.training_spent)}
-                for r in self.history],
+            "history": [r.to_dict() for r in self.history],
             "rng": self.rng.bit_generator.state,
             # annotation-service runtime state (None without a noisy
             # oracle): per-worker confusion estimates, the pending-request
@@ -701,8 +845,26 @@ class MCALCampaign:
             "theta_opt": float(self.theta_opt),
             "freeze_delta": bool(self.freeze_delta),
         }
+        # the trace append cursor: flush FIRST so the persisted cursor
+        # always points inside the file, then record where appends resume
+        # (TraceStore.resume truncates anything the checkpoint never saw)
+        if self.trace is not None:
+            self._emit("state_save", iter=self._iter,
+                       B_size=int(len(p.B_idx)))
+            self.trace.flush()
+            state["trace"] = {"next_seq": int(self.trace.next_seq)}
+        else:
+            state["trace"] = None
+        return state
 
     def load_state_dict(self, s: Dict):
+        v = int(s.get("version", 1))
+        if v > STATE_VERSION:
+            raise ValueError(
+                f"campaign state has schema version {v}, but this build "
+                f"understands at most version {STATE_VERSION} — it was "
+                f"written by a newer repro package; resume with that "
+                f"version (or re-run the campaign) instead")
         # fold any in-flight async retrain first: discarding its future
         # while the worker still trains would race the resume retrain
         # below on the same task/engine buffers
@@ -716,9 +878,16 @@ class MCALCampaign:
         p.in_B[:] = False
         p.in_B[p.B_idx] = True
         p.ledger = CostLedger.from_dict(s["ledger"])
+        if self.trace is not None:
+            # from_dict built a fresh ledger object: re-wire the bus so
+            # post-resume charges keep emitting
+            p.ledger.trace = self.trace
+            p.ledger.trace_name = "campaign"
         ann = getattr(self.task, "annotation", None)
         if ann is not None and s.get("annotation") is not None:
             ann.load_state_dict(s["annotation"])
+            if self.trace is not None and hasattr(ann, "attach_trace"):
+                ann.attach_trace(self.trace)
         self.eps_hist = {float(t): [tuple(x) for x in v]
                          for t, v in s["eps_hist"].items()}
         self.train_sizes = list(s["train_sizes"])
@@ -736,14 +905,8 @@ class MCALCampaign:
         self.freeze_delta = bool(s.get("freeze_delta", False))
         # iteration trace + acquisition RNG stream (absent in pre-PR4
         # checkpoints -> empty history / reseeded stream, as before)
-        self.history = [IterationRecord(
-            i=int(r["i"]), B_size=int(r["B_size"]), delta=int(r["delta"]),
-            eps_theta={float(t): e for t, e in r["eps_theta"].items()},
-            cstar=float(r["cstar"]), B_opt=int(r["B_opt"]),
-            theta_opt=float(r["theta_opt"]), feasible=bool(r["feasible"]),
-            stable=bool(r["stable"]), human_spent=float(r["human_spent"]),
-            training_spent=float(r["training_spent"]))
-            for r in s.get("history", [])]
+        self.history = [IterationRecord.from_dict(r)
+                        for r in s.get("history", [])]
         if "rng" in s:
             self.rng = np.random.default_rng()
             self.rng.bit_generator.state = s["rng"]
@@ -775,11 +938,20 @@ class MCALCampaign:
             # one feature sweep over B_idx rebuilds the k-center anchor
             # state under the freshly retrained classifier
             self._anchor_features()
+        # observability only: replay filters this out, so a preempted-
+        # and-resumed campaign's decision stream equals the continuous
+        # run's (the resume retrain above charges nothing — its cost was
+        # paid before the checkpoint)
+        self._emit("resume", iter=self._iter, B_size=int(len(p.B_idx)))
 
 
 def run_mcal(task, service: LabelingService,
-             cfg: MCALConfig = MCALConfig()) -> MCALResult:
-    return MCALCampaign(task, service, cfg).run()
+             cfg: MCALConfig = MCALConfig(),
+             trace: Optional[object] = None) -> MCALResult:
+    camp = MCALCampaign(task, service, cfg)
+    if trace is not None:
+        camp.attach_trace(trace)
+    return camp.run()
 
 
 def select_architecture(

@@ -112,6 +112,13 @@ class LiveTask:
                               mesh=self.mesh)
         self._res_idx = np.zeros((0,), np.int64)  # resident-pool row ledger
 
+    def attach_trace(self, trace) -> None:
+        """Wire the campaign event bus into this task's runtimes: the
+        paged sweep runner (page cursors, sink finalizations) and the fit
+        engine (submit/fold timestamps for async retrains)."""
+        self._sweep.trace = trace
+        self._fit.trace = trace
+
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:
         """Purchased human labels.  With an :attr:`annotation` service

@@ -132,6 +132,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="adaptive-repeats confidence threshold")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
+    # -- campaign trace (event bus) -----------------------------------------
+    ap.add_argument("--trace", default="",
+                    help="append-only campaign trace (JSONL): every "
+                         "decision/charge/measurement event; a campaign "
+                         "resumed via --state appends to it at the "
+                         "checkpointed cursor.  Watch it live with "
+                         "python -m repro.launch.report")
+    ap.add_argument("--trace-replay", default="", metavar="TRACE",
+                    help="reconstruct a campaign report from its trace "
+                         "alone (no engines, zero recompute) and exit")
+    ap.add_argument("--trace-diff", nargs=2, default=None,
+                    metavar=("TRACE_A", "TRACE_B"),
+                    help="first-divergence analysis between two sibling "
+                         "campaign traces, then exit")
     return ap
 
 
@@ -185,54 +199,112 @@ def _save_state(path: str, campaign=None, cursor=None, campaign_blob=None):
 
 
 def run_campaign(task, service, cfg, *, state_path: str = "",
-                 sweep_ckpt_pages: int = 0, iters_per_run: int = 0):
-    """Drive one campaign with optional ``--state`` fault tolerance.
-    Returns (MCALResult | None, campaign) — result is None when
-    ``iters_per_run`` preempted the loop before completion."""
+                 sweep_ckpt_pages: int = 0, iters_per_run: int = 0,
+                 trace_path: str = "", campaign_id: str = "campaign"):
+    """Drive one campaign with optional ``--state`` fault tolerance and
+    an optional ``--trace`` event log.  Returns (MCALResult | None,
+    campaign) — result is None when ``iters_per_run`` preempted the loop
+    before completion.  A resumed campaign whose state checkpoint embeds
+    a trace cursor APPENDS to its existing trace (no gaps, no duplicate
+    sequence numbers); otherwise the trace starts fresh."""
     from repro.core import MCALCampaign
     from repro.serving.sweep import SweepCheckpoint
 
     camp = MCALCampaign(task, service, cfg)
+    blob = None
     if state_path and os.path.exists(state_path):
         with open(state_path) as f:
             blob = json.load(f)
-        camp.load_state_dict(blob["campaign"])
-        if "sweep_cursor" in blob:
-            camp.resume_sweep_checkpoint = SweepCheckpoint.from_json(
-                blob["sweep_cursor"])
-    else:
-        camp.bootstrap()
-        if state_path:
-            _save_state(state_path, camp)
 
-    if state_path and sweep_ckpt_pages:
-        camp.sweep_checkpoint_every = sweep_ckpt_pages
-        frozen = {}   # campaign blob serialized once at the first cut
+    trace = None
+    if trace_path:
+        from repro.trace import TraceStore
+        cursor = blob["campaign"].get("trace") if blob is not None else None
+        if cursor and os.path.exists(trace_path):
+            trace = TraceStore.resume(trace_path, cursor["next_seq"])
+        else:
+            trace = TraceStore(trace_path, campaign_id)
+        # attach BEFORE bootstrap/load so the trace opens with the
+        # campaign's first event (campaign_begin or the resume marker)
+        camp.attach_trace(trace)
 
-        def save_cursor(ck):
-            if "blob" not in frozen:
-                frozen["blob"] = camp.state_dict()
-            _save_state(state_path, cursor=ck,
-                        campaign_blob=frozen["blob"])
+    try:
+        if blob is not None:
+            camp.load_state_dict(blob["campaign"])
+            if "sweep_cursor" in blob:
+                camp.resume_sweep_checkpoint = SweepCheckpoint.from_json(
+                    blob["sweep_cursor"])
+        else:
+            camp.bootstrap()
+            if state_path:
+                _save_state(state_path, camp)
 
-        camp.on_sweep_checkpoint = save_cursor
+        if state_path and sweep_ckpt_pages:
+            camp.sweep_checkpoint_every = sweep_ckpt_pages
+            frozen = {}   # campaign blob serialized once at the first cut
 
-    ran = 0
-    while not camp.done:
-        camp.iteration()
-        ran += 1
-        if state_path:
-            _save_state(state_path, camp)
-        if iters_per_run and ran >= iters_per_run and not camp.done:
-            return None, camp
-    res = camp.commit()
-    if state_path and os.path.exists(state_path):
-        os.remove(state_path)   # campaign complete: the state is spent
-    return res, camp
+            def save_cursor(ck):
+                if "blob" not in frozen:
+                    frozen["blob"] = camp.state_dict()
+                _save_state(state_path, cursor=ck,
+                            campaign_blob=frozen["blob"])
+
+            camp.on_sweep_checkpoint = save_cursor
+
+        ran = 0
+        while not camp.done:
+            camp.iteration()
+            ran += 1
+            if state_path:
+                _save_state(state_path, camp)
+            if iters_per_run and ran >= iters_per_run and not camp.done:
+                return None, camp
+        res = camp.commit()
+        if state_path and os.path.exists(state_path):
+            os.remove(state_path)   # campaign complete: the state is spent
+        return res, camp
+    finally:
+        if trace is not None:
+            trace.close()
 
 
 def main():
     args = build_parser().parse_args()
+
+    # trace analysis modes exit before any task/engine construction:
+    # they read event files, not devices
+    if args.trace_diff is not None:
+        from repro.trace import diff
+        d = diff(*args.trace_diff)
+        if d is None:
+            print(json.dumps({"identical": True}))
+        else:
+            print(json.dumps({"identical": False,
+                              "divergence": d.describe(),
+                              "index": d.index, "kind_a": d.kind_a,
+                              "kind_b": d.kind_b, "fields": d.fields},
+                             indent=2))
+        return
+    if args.trace_replay:
+        from repro.trace import replay
+        rp = replay(args.trace_replay)
+        report = {
+            "campaign": rp.campaign, "replayed_from": args.trace_replay,
+            "decision": rp.decision, "done_reason": rp.done_reason,
+            "iterations": len(rp.history), "cost": rp.total_cost,
+            "ledger": rp.ledger, "votes": rp.votes,
+            "config": rp.config, "runtime": rp.runtime,
+        }
+        if rp.result is not None:
+            report.update(theta_final=rp.result.theta_final,
+                          measured_error=rp.result.measured_error,
+                          B_size=rp.result.B_size,
+                          S_size=rp.result.S_size)
+        print(json.dumps(report, indent=2))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(report, f)
+        return
 
     from repro.core import (MCALConfig, SERVICES, LiveTask,
                             make_emulated_task)
@@ -268,13 +340,19 @@ def main():
                                   sweep_page=args.sweep_page)
         task.annotation = annotation
 
+    campaign_id = (f"{'live' if args.live else args.dataset}-"
+                   f"{args.arch}-s{args.seed}")
     res, camp = run_campaign(task, service, cfg, state_path=args.state,
                              sweep_ckpt_pages=args.sweep_ckpt_pages,
-                             iters_per_run=args.iters_per_run)
+                             iters_per_run=args.iters_per_run,
+                             trace_path=args.trace,
+                             campaign_id=campaign_id)
     if res is None:
         report = {"resumable": True, "state": args.state,
                   "iterations": len(camp.history),
                   "B_size": len(camp.pool.B_idx)}
+        if args.trace:
+            report["trace"] = args.trace
         print(json.dumps(report, indent=2))
         return
     X = task.pool_size
@@ -293,6 +371,8 @@ def main():
         "ledger": res.ledger,
         "iterations": len(res.history),
     }
+    if args.trace:
+        report["trace"] = args.trace
     if annotation is not None:
         report["annotation"] = {
             "votes": annotation.votes_bought,

@@ -1,0 +1,197 @@
+"""Live campaign observability from the trace alone.
+
+Renders a running (or finished) campaign's cost-vs-iteration curve,
+ledger burn rate, and annotator quality drift straight from its trace
+file — including one that is still being written (``read_trace``
+tolerates the mid-write truncated final line), so an operator can watch
+a campaign without touching the process driving it:
+
+    PYTHONPATH=src python -m repro.launch.report TRACE.jsonl
+    PYTHONPATH=src python -m repro.launch.report TRACE.jsonl --watch 5
+    PYTHONPATH=src python -m repro.launch.report TRACE.jsonl --json
+
+Everything here reads events only — no jax, no engines, no recompute
+(:func:`summarize` imports nothing heavier than the trace store).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+from repro.trace.store import read_trace
+
+
+def summarize(path: str) -> Dict:
+    """One pass over the trace -> the observability summary the text and
+    JSON views render.  Safe on a trace mid-write."""
+    events = read_trace(path)
+    out: Dict = {
+        "trace": path, "campaign": events[0].campaign if events else "",
+        "events": len(events), "status": "empty" if not events else
+        "running", "config": {}, "runtime": {}, "pool_size": 0,
+        "iterations": [], "ledger": None, "service_ledger": None,
+        "burn": None, "annotator": [], "sweeps": {"cuts": 0, "done": 0},
+        "fits": {"submitted": 0, "folded": 0},
+        "saves": 0, "resumes": 0, "done_reason": None, "commit": None,
+    }
+    if not events:
+        return out
+
+    charges: List = []          # campaign-ledger charge events
+    for e in events:
+        p = e.payload
+        if e.kind == "campaign_begin":
+            out["config"] = dict(p.get("config", {}))
+            out["runtime"] = dict(p.get("runtime", {}))
+            out["pool_size"] = int(p.get("pool_size", 0))
+        elif e.kind == "charge":
+            if p.get("ledger") == "campaign":
+                charges.append(e)
+                out["ledger"] = {k: p[k] for k in (
+                    "human", "training", "human_labels", "human_votes",
+                    "total")}
+            else:
+                out["service_ledger"] = {k: p[k] for k in (
+                    "human", "human_votes", "total")}
+        elif e.kind == "iteration":
+            out["iterations"].append({
+                "i": p["i"], "B_size": p["B_size"], "delta": p["delta"],
+                "cstar": p["cstar"], "B_opt": p["B_opt"],
+                "theta_opt": p["theta_opt"], "stable": p["stable"],
+                "human_spent": p["human_spent"],
+                "training_spent": p["training_spent"]})
+        elif e.kind == "annotator_snapshot":
+            acc = p.get("worker_accuracy") or []
+            out["annotator"].append({
+                "ts": e.ts, "residual_error": p.get("residual_error"),
+                "avg_repeats": p.get("avg_repeats"),
+                "min_worker_accuracy": min(acc) if acc else None,
+                "mean_worker_accuracy": (sum(acc) / len(acc)
+                                         if acc else None)})
+        elif e.kind == "sweep_cut":
+            out["sweeps"]["cuts"] += 1
+        elif e.kind == "sweep_done":
+            out["sweeps"]["done"] += 1
+        elif e.kind == "fit_submit":
+            out["fits"]["submitted"] += 1
+        elif e.kind == "fit_done":
+            out["fits"]["folded"] += 1
+        elif e.kind == "state_save":
+            out["saves"] += 1
+        elif e.kind == "resume":
+            out["resumes"] += 1
+        elif e.kind == "done":
+            out["done_reason"] = p.get("reason")
+            out["status"] = f"done:{p.get('reason')}"
+        elif e.kind == "commit":
+            out["commit"] = {k: p.get(k) for k in (
+                "decision", "B_size", "S_size", "theta_final",
+                "measured_error")}
+            out["commit"]["total_cost"] = p.get("ledger", {}).get("total")
+            out["status"] = "committed"
+
+    # ledger burn rate: $ per wall-clock second over the charge stream,
+    # plus a recent window (the live number an operator actually watches)
+    if len(charges) >= 2:
+        span = charges[-1].ts - charges[0].ts
+        spent = (charges[-1].payload["total"] - charges[0].payload["total"])
+        recent = charges[-min(len(charges), 8):]
+        rspan = recent[-1].ts - recent[0].ts
+        rspent = (recent[-1].payload["total"] - recent[0].payload["total"])
+        out["burn"] = {
+            "per_second": spent / span if span > 0 else None,
+            "recent_per_second": rspent / rspan if rspan > 0 else None,
+            "window_seconds": span}
+    return out
+
+
+def render(s: Dict) -> str:
+    """The terminal view of one :func:`summarize` pass."""
+    lines = [f"campaign {s['campaign']}  [{s['status']}]  "
+             f"{s['events']} events  pool={s['pool_size']}"]
+    rt = s["runtime"]
+    if rt:
+        lines.append("runtime: " + ", ".join(f"{k}={v}"
+                                             for k, v in rt.items()))
+    if s["iterations"]:
+        lines.append("")
+        lines.append(f"{'it':>4} {'|B|':>7} {'delta':>6} {'C*':>10} "
+                     f"{'B_opt':>7} {'theta':>6} {'human$':>9} "
+                     f"{'train$':>9} {'stable':>6}")
+        for r in s["iterations"]:
+            lines.append(
+                f"{r['i']:>4} {r['B_size']:>7} {r['delta']:>6} "
+                f"{r['cstar']:>10.2f} {r['B_opt']:>7} "
+                f"{r['theta_opt']:>6.2f} {r['human_spent']:>9.2f} "
+                f"{r['training_spent']:>9.2f} "
+                f"{'yes' if r['stable'] else '':>6}")
+    if s["ledger"]:
+        led = s["ledger"]
+        lines.append("")
+        lines.append(
+            f"ledger: total ${led['total']:.2f}  (human ${led['human']:.2f}"
+            f" / training ${led['training']:.2f}  "
+            f"{led['human_labels']} labels, {led['human_votes']} votes)")
+    if s["burn"]:
+        b = s["burn"]
+        rate = b["recent_per_second"] or b["per_second"]
+        if rate is not None:
+            lines.append(f"burn rate: ${rate:.3f}/s (recent)  "
+                         f"${b['per_second']:.3f}/s overall over "
+                         f"{b['window_seconds']:.1f}s")
+    if s["annotator"]:
+        first, last = s["annotator"][0], s["annotator"][-1]
+        lines.append(
+            f"annotators: residual error {first['residual_error']:.3f} -> "
+            f"{last['residual_error']:.3f}, avg repeats "
+            f"{last['avg_repeats']:.2f}, worker accuracy "
+            f"min {last['min_worker_accuracy']:.2f} / "
+            f"mean {last['mean_worker_accuracy']:.2f} "
+            f"({len(s['annotator'])} snapshots)")
+    ov = s["fits"]
+    if ov["submitted"] or s["sweeps"]["cuts"] or s["sweeps"]["done"]:
+        lines.append(
+            f"runtimes: {ov['folded']}/{ov['submitted']} async fits "
+            f"folded, {s['sweeps']['done']} sweeps "
+            f"({s['sweeps']['cuts']} cursor cuts)")
+    if s["saves"] or s["resumes"]:
+        lines.append(f"fault tolerance: {s['saves']} state saves, "
+                     f"{s['resumes']} resumes")
+    if s["commit"]:
+        c = s["commit"]
+        lines.append(
+            f"COMMITTED: {c['decision']}  |B|={c['B_size']} "
+            f"S={c['S_size']} theta={c['theta_final']:.2f}  "
+            f"measured_error={c['measured_error']:.4f}  "
+            f"total ${c['total_cost']:.2f}")
+    elif s["done_reason"]:
+        lines.append(f"loop done ({s['done_reason']}), not yet committed")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser(
+        description="live view of an MCAL campaign trace")
+    ap.add_argument("trace", help="trace JSONL path (may be mid-write)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the summary as JSON instead of text")
+    ap.add_argument("--watch", type=float, default=0.0, metavar="SECONDS",
+                    help="re-render every N seconds until the campaign "
+                         "commits (0 = render once)")
+    args = ap.parse_args(argv)
+    while True:
+        s = summarize(args.trace)
+        if args.json:
+            print(json.dumps(s, indent=2))
+        else:
+            print(render(s))
+        if not args.watch or s["commit"] is not None:
+            return
+        time.sleep(args.watch)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -451,6 +451,13 @@ class PoolSweepRunner:
         self.adapter = adapter
         self.cfg = cfg
         self._exec: Optional[ThreadPoolExecutor] = None
+        # campaign event bus (observability only: page cursors + sink
+        # finalizations; emits may come from the runner's worker thread)
+        self.trace = None
+
+    def _emit(self, kind: str, **payload) -> None:
+        if self.trace is not None:
+            self.trace.emit(kind, **payload)
 
     def n_pages(self, n: int) -> int:
         return -(-n // self.cfg.page_rows)
@@ -481,6 +488,8 @@ class PoolSweepRunner:
                                     stop, n)
                 page = stop
                 if page < n_pages:
+                    self._emit("sweep_cut", next_page=int(page),
+                               n=int(n), sink=sink.kind)
                     on_checkpoint(SweepCheckpoint(
                         next_page=page, n=n,
                         page_rows=self.cfg.page_rows, sink_kind=sink.kind,
@@ -488,6 +497,8 @@ class PoolSweepRunner:
         else:
             state = self._sweep(params, pool, sink, state, start,
                                 n_pages, n)
+        self._emit("sweep_done", n=int(n), pages=int(n_pages),
+                   resumed_from=int(start), sink=sink.kind)
         return sink.finalize(state, n)
 
     def run_until(self, params, pool, sink, stop_page: int, *,
@@ -500,6 +511,8 @@ class PoolSweepRunner:
         start, state = self._restore(sink, n, checkpoint)
         stop = min(stop_page, self.n_pages(n))
         state = self._sweep(params, pool, sink, state, start, stop, n)
+        self._emit("sweep_cut", next_page=int(stop), n=int(n),
+                   sink=sink.kind)
         return SweepCheckpoint(next_page=stop, n=n,
                                page_rows=self.cfg.page_rows,
                                sink_kind=sink.kind,

@@ -1,0 +1,13 @@
+"""Campaign event bus + append-only trace store.
+
+Public API:
+    TraceStore / TraceEvent / read_trace   append-only JSONL event log
+    replay(path) -> ReplayedCampaign       full trajectory, zero recompute
+    diff(a, b) -> TraceDiff | None         first-divergence analysis
+    REPLAY_KINDS / OBSERVABILITY_KINDS     the emit-site contract
+"""
+from repro.trace.replay import (ALL_KINDS, OBSERVABILITY_KINDS,
+                                REPLAY_KINDS, ReplayedCampaign, TraceDiff,
+                                diff, replay)
+from repro.trace.store import (TraceError, TraceEvent, TraceStore,
+                               iter_trace, read_trace, sanitize)

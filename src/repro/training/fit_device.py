@@ -144,6 +144,10 @@ class FitEngine:
         self._res_x: Optional[jax.Array] = None
         self._res_y: Optional[jax.Array] = None
         self._res_n = 0
+        # campaign event bus (observability only: submit/fold timestamps
+        # for async retrains; the fold emit runs on the worker thread)
+        self.trace = None
+        self._submit_seq = 0
 
     # -- program construction ------------------------------------------------
 
@@ -284,16 +288,35 @@ class FitEngine:
                                             thread_name_prefix="fit-engine")
         return self._exec
 
+    def _traced(self, fn: Callable, label: str) -> Callable:
+        """Bracket a worker-thread job with fit_submit/fit_done events —
+        the submit/fold timestamps the live report's overlap view reads.
+        The pairing key is a per-engine job counter (events from the
+        worker interleave arbitrarily with the main thread's)."""
+        if self.trace is None:
+            return fn
+        job, self._submit_seq = self._submit_seq, self._submit_seq + 1
+        self.trace.emit("fit_submit", job=int(job), what=label)
+        trace = self.trace
+
+        def wrapped(*args, **kw):
+            out = fn(*args, **kw)
+            trace.emit("fit_done", job=int(job), what=label)
+            return out
+        return wrapped
+
     def submit_fit(self, rng: jax.Array, x, y) -> FitFuture:
         """Launch :meth:`fit` on the engine's worker thread (mirrors
         ``PoolSweepRunner.submit``); the caller overlaps its own work and
         synchronizes at ``result()``."""
-        return FitFuture(self._executor().submit(self.fit, rng, x, y))
+        return FitFuture(self._executor().submit(
+            self._traced(self.fit, "fit"), rng, x, y))
 
     def submit_call(self, fn: Callable, *args, **kw) -> FitFuture:
         """Run an arbitrary callable on the fit worker (composite jobs
         like retrain + measurement sweep that start with a fit)."""
-        return FitFuture(self._executor().submit(fn, *args, **kw))
+        return FitFuture(self._executor().submit(
+            self._traced(fn, "call"), *args, **kw))
 
     # -- compile-cache bookkeeping ------------------------------------------
 

@@ -1,0 +1,381 @@
+"""Campaign event bus + append-only trace store (tier-1).
+
+The trace IS the campaign: replaying the JSONL event stream must
+reconstruct the full decision trajectory — iteration records, running
+ledger, decisions, the committed result — bit-identically with ZERO
+engine recompute, across sync/async engine variants, noisy annotation,
+and preempt/resume hops.  ``diff`` must localize the first real
+divergence and stay silent on scheduling-only differences.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import AMAZON, MCALCampaign, MCALConfig, make_emulated_task
+from repro.trace import (ALL_KINDS, OBSERVABILITY_KINDS, REPLAY_KINDS,
+                         TraceError, TraceEvent, TraceStore, diff,
+                         read_trace, replay, sanitize)
+
+# ---------------------------------------------------------------------------
+# store level: schema round-trip, tolerance rules, resume truncation
+# ---------------------------------------------------------------------------
+
+
+def test_event_json_round_trip_with_numpy_payload():
+    e = TraceEvent(seq=3, campaign="c", kind="charge", ts=1.5,
+                   payload={"n": np.int64(7), "cost": np.float32(0.25),
+                            "ok": np.bool_(True), "idx": np.arange(3)})
+    d = json.loads(e.to_json())
+    e2 = TraceEvent.from_dict(d)
+    assert (e2.seq, e2.campaign, e2.kind, e2.ts) == (3, "c", "charge", 1.5)
+    assert e2.payload == {"n": 7, "cost": 0.25, "ok": True, "idx": [0, 1, 2]}
+
+
+def test_event_rejects_non_finite_payload():
+    e = TraceEvent(seq=0, campaign="c", kind="x", ts=0.0,
+                   payload={"bad": float("nan")})
+    with pytest.raises(ValueError):
+        e.to_json()
+
+
+def test_sanitize_makes_payloads_strict_json():
+    out = sanitize({"nan": float("nan"), "inf": np.inf,
+                    "f": np.float64(2.0), "i": np.int32(3),
+                    "b": np.bool_(False),
+                    "nest": [{"k": -np.inf}, (1.0, 2.0)],
+                    "arr": np.array([1.5, np.nan])})
+    assert out == {"nan": None, "inf": None, "f": 2.0, "i": 3, "b": False,
+                   "nest": [{"k": None}, [1.0, 2.0]], "arr": [1.5, None]}
+    json.dumps(out, allow_nan=False)   # must not raise
+
+
+def test_store_buffers_then_flushes_monotone_seq(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    with TraceStore(p, "camp", flush_every=100) as tr:
+        tr.emit("campaign_begin", config={"seed": 0})
+        tr.emit("charge", total=1.0)
+        assert tr.next_seq == 2
+        assert read_trace(p) == []          # buffered: not on disk yet
+        tr.flush()
+        assert [e.seq for e in read_trace(p)] == [0, 1]
+        tr.emit("done", reason="x")
+    ev = read_trace(p)                      # close() flushed the tail
+    assert [e.seq for e in ev] == [0, 1, 2]
+    assert all(e.campaign == "camp" for e in ev)
+    assert read_trace(p, campaign="other") == []
+
+
+def test_read_tolerates_truncated_final_line_only(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    with TraceStore(p, "camp") as tr:
+        for i in range(4):
+            tr.emit("charge", total=float(i))
+    with open(p, "a") as f:
+        f.write('{"seq": 4, "campaign": "camp", "ki')   # mid-write tail
+    assert [e.seq for e in read_trace(p)] == [0, 1, 2, 3]
+
+    lines = open(p).read().splitlines()
+    lines[1] = lines[1][:20]                            # mid-file garbage
+    open(p, "w").write("\n".join(lines) + "\n")
+    with pytest.raises(TraceError):
+        read_trace(p)
+
+
+def test_resume_truncates_tail_and_continues_without_gaps(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    with TraceStore(p, "camp") as tr:
+        for i in range(6):
+            tr.emit("charge", total=float(i))
+    # checkpoint was cut at next_seq=4: events 4-5 are post-checkpoint
+    # work the resumed campaign redoes — resume drops them and re-appends
+    with TraceStore.resume(p, 4) as tr:
+        assert tr.campaign == "camp" and tr.next_seq == 4
+        tr.emit("charge", total=99.0)
+        tr.emit("done", reason="resumed")
+    ev = read_trace(p)
+    assert [e.seq for e in ev] == [0, 1, 2, 3, 4, 5]
+    assert ev[4].payload["total"] == 99.0 and ev[5].kind == "done"
+    # a cursor pointing past the flushed file is corruption, not a resume
+    with pytest.raises(TraceError):
+        TraceStore.resume(p, 100)
+
+
+# ---------------------------------------------------------------------------
+# campaign level: replay-equals-live, diff, resume append-only
+# ---------------------------------------------------------------------------
+
+
+def _traced_run(path, seed, campaign="camp", cfg=None):
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=4000, sweep_page=512)
+    cfg = cfg or MCALConfig(seed=seed)
+    camp = MCALCampaign(task, AMAZON, cfg)
+    with TraceStore(str(path), campaign) as tr:
+        camp.attach_trace(tr)
+        res = camp.run()
+    return res, camp
+
+
+@pytest.fixture(scope="module")
+def traces(tmp_path_factory):
+    """Three traced emulated campaigns: two seed-0 siblings (must diff
+    clean) and one seed-1 (must diverge at the config)."""
+    d = tmp_path_factory.mktemp("traces")
+    runs = {}
+    for name, seed in (("a0", 0), ("b0", 0), ("a1", 1)):
+        p = d / f"{name}.jsonl"
+        res, camp = _traced_run(p, seed, campaign=f"cifar10-s{seed}")
+        runs[name] = (str(p), res, camp)
+    return runs
+
+
+@pytest.mark.parametrize("run", ["a0", "a1"])
+def test_replay_equals_live_with_zero_recompute(traces, run):
+    path, res, camp = traces[run]
+    rp = replay(path)
+    assert rp.result is not None and rp.decision == res.decision
+    assert rp.total_cost == res.total_cost               # bit-identical
+    assert rp.votes == res.ledger["human_votes"]
+    assert rp.pool_size == len(res.labels)
+    assert len(rp.history) == len(res.history)
+    for got, want in zip(rp.history, res.history):
+        assert got.to_dict() == want.to_dict()
+    assert rp.result.to_dict(with_history=False) == \
+        res.to_dict(with_history=False)
+    # structural contract: known kinds, one begin, commit is flushed last
+    kinds = [e.kind for e in rp.events]
+    assert set(kinds) <= ALL_KINDS
+    assert kinds.count("campaign_begin") == 1
+    assert kinds[-1] == "commit"
+
+
+def test_diff_is_none_for_identical_siblings(traces):
+    assert diff(traces["a0"][0], traces["b0"][0]) is None
+
+
+def test_diff_localizes_injected_seed_divergence(traces):
+    d = diff(traces["a0"][0], traces["a1"][0])
+    assert d is not None and d.index == 0
+    assert d.kind_a == d.kind_b == "campaign_begin"
+    assert "config" in d.fields
+    assert "diverge at event #0" in d.describe()
+
+
+def test_diff_reports_truncated_trace_as_end(traces, tmp_path):
+    src = traces["a0"][0]
+    cut = str(tmp_path / "cut.jsonl")
+    lines = [l for l in open(src).read().splitlines() if l.strip()]
+    open(cut, "w").write("\n".join(lines[:-1]) + "\n")   # drop the commit
+    d = diff(src, cut)
+    assert d is not None and d.kind_b == "<end>"
+    assert "ends" in d.describe()
+
+
+def test_replay_rejects_sequence_gap(traces, tmp_path):
+    src = traces["a0"][0]
+    bad = str(tmp_path / "gap.jsonl")
+    lines = [l for l in open(src).read().splitlines() if l.strip()]
+    open(bad, "w").write("\n".join(lines[:3] + lines[4:]) + "\n")
+    with pytest.raises(TraceError):
+        replay(bad)
+
+
+def test_noisy_adaptive_campaign_replays_and_snapshots(tmp_path):
+    """The annotation broker's decision stream (service-ledger charges)
+    and telemetry (vote rounds, adaptive top-ups, per-worker accuracy
+    snapshots) all land in one trace; replay reproduces the economics."""
+    from repro.annotation import make_annotation_service
+
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=4000, sweep_page=512)
+    task.annotation = make_annotation_service(
+        task.num_classes, n_workers=5, noise=0.2, repeats=2,
+        max_repeats=4, adaptive=True, aggregator="ds", pricing=AMAZON,
+        seed=0)
+    cfg = MCALConfig(seed=0,
+                     label_quality=task.annotation.expected_quality())
+    p = str(tmp_path / "noisy.jsonl")
+    camp = MCALCampaign(task, AMAZON, cfg)
+    with TraceStore(p, "noisy-s0") as tr:
+        camp.attach_trace(tr)
+        res = camp.run()
+
+    rp = replay(p)
+    assert rp.total_cost == res.total_cost
+    assert rp.votes == camp.pool.ledger.human_votes
+    kinds = {e.kind for e in rp.events}
+    assert {"vote_round", "topup", "annotator_snapshot"} <= kinds
+    assert any(c["ledger"] == "service" for c in rp.charges)
+    snaps = [e for e in rp.events if e.kind == "annotator_snapshot"]
+    assert all(len(e.payload["worker_accuracy"]) == 5 for e in snaps)
+
+
+def test_async_sweep_and_fit_siblings_diff_clean(tmp_path):
+    """sweep_async + fit_async change scheduling, provably not
+    decisions: the decision streams must be identical event-for-event
+    (diff None), with only observability events differing."""
+    from repro.core import LiveTask
+    from repro.data.synth import make_classification
+
+    x, y = make_classification(800, num_classes=10, dim=16,
+                               difficulty=0.3, seed=4)
+
+    def run(name, sweep_async, fit_async):
+        task = LiveTask(features=x, groundtruth=y, num_classes=10,
+                        epochs=3, seed=4, sweep_page=256,
+                        score_microbatch=256)
+        camp = MCALCampaign(task, AMAZON,
+                            MCALConfig(seed=4, max_iters=3,
+                                       delta0_frac=0.02,
+                                       sweep_async=sweep_async,
+                                       fit_async=fit_async))
+        p = str(tmp_path / f"{name}.jsonl")
+        with TraceStore(p, name) as tr:
+            camp.attach_trace(tr)
+            camp.bootstrap()
+            while not camp.done:
+                camp.iteration()
+            res = camp.commit()
+        return p, res
+
+    p_sync, r_sync = run("sync", False, False)
+    p_async, r_async = run("async", True, True)
+    assert diff(p_sync, p_async) is None
+    assert replay(p_async).total_cost == r_sync.total_cost
+    assert r_async.total_cost == pytest.approx(r_sync.total_cost,
+                                               rel=1e-9)
+    # the async trace DOES carry its own scheduling telemetry
+    async_kinds = {e.kind for e in read_trace(p_async)}
+    assert {"fit_submit", "fit_done"} <= async_kinds
+
+
+def test_preempted_campaign_trace_is_append_only(tmp_path):
+    """The acceptance scenario: a campaign preempted and resumed N times
+    (state checkpoint embeds the trace cursor) yields ONE trace with no
+    gaps, no duplicate seqs, a single campaign_begin — and its decision
+    stream diffs clean against the uninterrupted run's."""
+    from repro.launch.label import run_campaign
+
+    cfg = MCALConfig(seed=0)
+
+    def task():
+        return make_emulated_task("cifar10", "resnet18", seed=0,
+                                  pool_size=4000, sweep_page=512)
+
+    cont = str(tmp_path / "cont.jsonl")
+    res_cont, _ = run_campaign(task(), AMAZON, cfg, trace_path=cont,
+                               campaign_id="cifar10-s0")
+
+    prem = str(tmp_path / "prem.jsonl")
+    state = str(tmp_path / "state.json")
+    res, hops = None, 0
+    while res is None:
+        res, camp = run_campaign(task(), AMAZON, cfg, state_path=state,
+                                 iters_per_run=2, trace_path=prem,
+                                 campaign_id="cifar10-s0")
+        hops += 1
+        assert hops < 50
+    assert hops > 1 and not os.path.exists(state)
+
+    ev = read_trace(prem)
+    assert [e.seq for e in ev] == list(range(len(ev)))   # no gaps/dups
+    kinds = [e.kind for e in ev]
+    assert kinds.count("campaign_begin") == 1
+    assert kinds.count("resume") == hops - 1
+    assert kinds.count("state_save") >= hops - 1
+    assert diff(cont, prem) is None
+    rp = replay(prem)
+    assert rp.total_cost == res_cont.total_cost
+    assert rp.total_cost == res.total_cost
+    assert len(rp.history) == len(res_cont.history)
+
+
+def test_noisy_async_preempted_campaign_replays_bit_identically(tmp_path):
+    """The PR's acceptance criterion verbatim: a NOISY (adaptive
+    Dawid-Skene annotation) ASYNC (sweep_async + fit_async) campaign,
+    preempted and resumed, replays bit-identically to its live records
+    and ledger — and diffs clean against its uninterrupted sibling."""
+    from repro.annotation import make_annotation_service
+    from repro.core import LiveTask
+    from repro.data.synth import make_classification
+    from repro.launch.label import run_campaign
+
+    x, y = make_classification(800, num_classes=10, dim=16,
+                               difficulty=0.3, seed=4)
+
+    def task():
+        t = LiveTask(features=x, groundtruth=y, num_classes=10,
+                     epochs=3, seed=4, sweep_page=256,
+                     score_microbatch=256)
+        t.annotation = make_annotation_service(
+            10, n_workers=5, noise=0.15, repeats=2, max_repeats=4,
+            adaptive=True, aggregator="ds", pricing=AMAZON, seed=0)
+        return t
+
+    cfg = MCALConfig(seed=4, max_iters=3, delta0_frac=0.02,
+                     eps_target=0.15, sweep_async=True, fit_async=True,
+                     label_quality=task().annotation.expected_quality())
+
+    cont = str(tmp_path / "cont.jsonl")
+    res_cont, camp_cont = run_campaign(task(), AMAZON, cfg,
+                                       trace_path=cont,
+                                       campaign_id="live-s4")
+
+    prem = str(tmp_path / "prem.jsonl")
+    state = str(tmp_path / "state.json")
+    res, hops = None, 0
+    while res is None:
+        res, camp = run_campaign(task(), AMAZON, cfg, state_path=state,
+                                 iters_per_run=1, trace_path=prem,
+                                 campaign_id="live-s4")
+        hops += 1
+        assert hops < 20
+    assert hops > 1 and not os.path.exists(state)
+
+    ev = read_trace(prem)
+    assert [e.seq for e in ev] == list(range(len(ev)))
+    assert [e.kind for e in ev].count("campaign_begin") == 1
+    assert diff(cont, prem) is None
+    rp = replay(prem)
+    assert rp.total_cost == res.total_cost == res_cont.total_cost
+    assert rp.decision == res_cont.decision
+    assert len(rp.history) == len(res_cont.history)
+    for got, want in zip(rp.history, res_cont.history):
+        assert got.to_dict() == want.to_dict()
+    assert rp.votes == camp_cont.pool.ledger.human_votes
+    assert rp.votes > rp.ledger["human_labels"]   # repeats really bought
+
+
+def test_state_dict_version_gate(traces):
+    """Satellite: state blobs carry a schema version; a blob from a
+    FUTURE version is rejected instead of being half-loaded."""
+    from repro.core.mcal import STATE_VERSION
+
+    _, _, camp = traces["a0"]
+    sd = json.loads(json.dumps(camp.state_dict()))
+    assert sd["version"] == STATE_VERSION
+    assert sd["trace"] is not None          # cursor embedded while traced
+
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=4000, sweep_page=512)
+    fresh = MCALCampaign(task, AMAZON, MCALConfig(seed=0))
+    with pytest.raises(ValueError, match="version"):
+        fresh.load_state_dict(dict(sd, version=STATE_VERSION + 1))
+
+
+def test_result_and_record_shared_serialization(traces):
+    """Satellite: MCALResult/IterationRecord own their dict round-trip
+    (the same code path the commit/iteration trace events use)."""
+    from repro.core.mcal import IterationRecord, MCALResult
+
+    _, res, _ = traces["a0"]
+    for rec in res.history:
+        assert IterationRecord.from_dict(rec.to_dict()).to_dict() == \
+            rec.to_dict()
+    d = res.to_dict()
+    r2 = MCALResult.from_dict(d)
+    assert r2.to_dict() == d
+    assert r2.total_cost == res.total_cost
+    assert len(r2.labels) == len(res.labels)
