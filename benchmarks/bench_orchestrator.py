@@ -1,0 +1,130 @@
+"""Multi-tenant orchestrator benchmark: one mesh, one compile cache.
+
+Two gated claims about running N matched-shape campaigns as a fleet over
+ONE shared engine bundle (``launch.orchestrator.SharedEngines``):
+
+* **shared compile cache** — tenant #1 pays the XLA compiles; tenants
+  2..N run entirely out of the bundle's pow2 pack-shape cache (ZERO new
+  programs at matched shapes, measured via ``cache_keys()``);
+* **fleet wall-clock** — the concurrent shared-engine fleet completes in
+  <= 0.75x the wall of the SAME campaigns run serially on fresh private
+  engines (the per-campaign recompiles the fleet amortizes away).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+
+WALL_GATE = 0.75                 # shared-fleet wall / fresh-serial wall
+N_TENANTS = 4
+CLASSES = 3
+ENGINE_KW = dict(epochs=2, score_microbatch=128, sweep_page=128)
+
+
+def _data(pool: int):
+    from repro.data.synth import make_classification
+    return make_classification(pool, num_classes=CLASSES, difficulty=0.3,
+                               seed=0)
+
+
+def _specs(n: int):
+    from repro.core import MCALConfig
+    from repro.core.tenant import TenantSpec
+    return [TenantSpec(f"t{i}", priority=i % 2, seed=i,
+                       cfg=MCALConfig(max_iters=2, delta0_frac=0.1,
+                                      test_frac=0.2, seed=i))
+            for i in range(n)]
+
+
+def _fresh_serial(x, y, specs) -> None:
+    """The baseline leg: the same campaigns, one at a time, each on
+    fresh PRIVATE engines — every tenant pays its own compiles."""
+    from repro.core import AMAZON, MCALCampaign
+    from repro.core.task import LiveTask
+    for s in specs:
+        task = LiveTask(features=x, groundtruth=y, num_classes=CLASSES,
+                        seed=s.seed, epochs=ENGINE_KW["epochs"],
+                        score_microbatch=ENGINE_KW["score_microbatch"],
+                        sweep_page=ENGINE_KW["sweep_page"])
+        camp = MCALCampaign(task, AMAZON, s.cfg)
+        try:
+            camp.run()
+        finally:
+            camp.close()
+
+
+def _shared_fleet(x, y, specs) -> None:
+    """The fleet leg: one SharedEngines bundle, concurrent rounds."""
+    from repro.core import AMAZON
+    from repro.launch.orchestrator import build_fleet
+    orch = build_fleet(x, y, specs, service=AMAZON, engine_kw=ENGINE_KW,
+                       concurrent=True)
+    try:
+        orch.run()
+    finally:
+        orch.close()
+
+
+def _cache_reuse(x, y, specs):
+    """Compiled-program counts after each tenant's full campaign over
+    one shared bundle — the gate reads counts[-1] - counts[0]."""
+    from repro.core import AMAZON, MCALCampaign
+    from repro.core.task import LiveTask
+    from repro.launch.orchestrator import SharedEngines
+    counts = []
+    with SharedEngines.build(x.shape[1], CLASSES, **ENGINE_KW) as eng:
+        for s in specs:
+            task = LiveTask(features=x, groundtruth=y,
+                            num_classes=CLASSES, seed=s.seed, engines=eng)
+            MCALCampaign(task, AMAZON, s.cfg).run()
+            counts.append(eng.compiled_count())
+    return counts
+
+
+def run_smoke(enforce: bool = True, pool: int = 512,
+              tenants: int = N_TENANTS):
+    x, y = _data(pool)
+    specs = _specs(tenants)
+
+    counts, cache_us = timed(_cache_reuse, x, y, specs)
+    new_after_t1 = counts[-1] - counts[0]
+    if enforce:
+        assert new_after_t1 == 0, (
+            f"tenants 2..{tenants} compiled {new_after_t1} new programs "
+            f"at matched shapes — the shared compile cache missed "
+            f"(counts per tenant: {counts})")
+
+    _, serial_us = timed(_fresh_serial, x, y, specs)
+    _, shared_us = timed(_shared_fleet, x, y, specs)
+    ratio = shared_us / serial_us
+    if enforce:
+        assert ratio <= WALL_GATE, (
+            f"shared-engine fleet took {ratio:.2f}x the fresh-serial "
+            f"wall (gate <= {WALL_GATE:.2f}x): {shared_us:.0f}us vs "
+            f"{serial_us:.0f}us for {tenants} tenants, pool {pool}")
+
+    return [
+        Row("orchestrator_cache", cache_us,
+            f"programs={counts[0]};new_after_t1={new_after_t1};gate=0",
+            meta={"pool": pool, "tenants": tenants,
+                  "compiled_counts": counts,
+                  "new_after_t1": new_after_t1}),
+        Row("orchestrator_fleet", shared_us,
+            f"speedup={serial_us / shared_us:.2f}x;"
+            f"gate>={1.0 / WALL_GATE:.2f}x;serial_us={serial_us:.0f}",
+            meta={"pool": pool, "tenants": tenants,
+                  "wall_ratio": ratio, "gate": WALL_GATE}),
+    ]
+
+
+def run():
+    return run_smoke(enforce=False, pool=2000)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in (run_smoke() if args.smoke else run()):
+        print(row.csv())

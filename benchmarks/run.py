@@ -18,13 +18,15 @@
   bench_trace              campaign event bus (<= 5% overhead gate +
                            replay-equals-live; smoke leaves
                            TRACE_smoke.jsonl as a CI artifact)
+  bench_orchestrator       multi-tenant fleet (0-new-compiles-after-
+                           tenant-1 gate + <= 0.75x fresh-serial wall)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
 CI smoke: PYTHONPATH=src python -m benchmarks.run --smoke
-          (small-shape fit + sweep + scoring + k-center + annotation
-          engine legs, speedup gates enforced — the CI matrix runs this
-          on both jax legs)
+          (small-shape fit + sweep + scoring + k-center + annotation +
+          orchestrator engine legs, speedup gates enforced — the CI
+          matrix runs this on both jax legs)
 
 Every invocation additionally writes a machine-readable
 ``BENCH_<run>.json`` (``--json`` overrides the path, ``--run-id`` the
@@ -60,6 +62,7 @@ MODULES = (
     "bench_fit",
     "bench_annotation",
     "bench_trace",
+    "bench_orchestrator",
 )
 
 
@@ -88,7 +91,8 @@ def run_smoke():
     """The CI smoke leg: small-shape fit-engine + sweep-runtime + engine
     benchmarks with their speedup gates ENFORCED (a gate miss fails the
     job).  Returns (status, rows, errors)."""
-    from benchmarks import (bench_annotation, bench_fit, bench_selection,
+    from benchmarks import (bench_annotation, bench_fit,
+                            bench_orchestrator, bench_selection,
                             bench_sweep, bench_trace)
 
     print("name,us_per_call,derived")
@@ -102,6 +106,7 @@ def run_smoke():
          lambda: bench_selection.run_kcenter(enforce=True)),
         ("bench_annotation[smoke]", bench_annotation.run_smoke),
         ("bench_trace[smoke]", bench_trace.run_smoke),
+        ("bench_orchestrator[smoke]", bench_orchestrator.run_smoke),
     ):
         try:
             for row in fn():
@@ -120,8 +125,8 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: fit + sweep + scoring + k-center + "
-                         "annotation engine legs at small shapes, "
-                         "speedup gates enforced")
+                         "annotation + orchestrator legs at small "
+                         "shapes, speedup gates enforced")
     ap.add_argument("--run-id", default="",
                     help="run name for the BENCH_<run>.json record "
                          "(default: the mode + jax version)")

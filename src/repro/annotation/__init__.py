@@ -4,14 +4,17 @@
     VoteAggregator                     device majority + Dawid-Skene EM
     majority_vote_host / dawid_skene_host   the NumPy reference oracles
     AnnotationService / RepeatPolicy   async request broker + budget ledger
+    AnnotationSession                  per-tenant view of a shared service
     make_annotation_service            one-call construction
 """
 from repro.annotation.aggregate import (AggregateConfig, DSResult,
-                                        VoteAggregator, dawid_skene_host,
+                                        ResidentVotes, VoteAggregator,
+                                        dawid_skene_host,
                                         majority_vote_host,
                                         vote_counts_host)
 from repro.annotation.oracle import (AnnotatorConfig, AnnotatorPool,
                                      make_annotator_pool)
 from repro.annotation.service import (AGGREGATORS, AnnotationService,
-                                      BudgetExceeded, RepeatPolicy,
+                                      AnnotationSession, BudgetExceeded,
+                                      RepeatPolicy,
                                       make_annotation_service)

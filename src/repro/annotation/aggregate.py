@@ -142,6 +142,14 @@ class AggregateConfig:
                              # item dimension (pow2 compile-cache reuse)
 
 
+@jax.jit
+def _scatter_rows(votes, rows, vals):
+    """Scatter updated vote rows into the resident padded matrix.
+    ``rows`` may repeat (the pow2 row-pack pads by repeating row 0) —
+    duplicates carry identical values, so the scatter is idempotent."""
+    return votes.at[rows].set(vals)
+
+
 @functools.partial(jax.jit, static_argnames=("num_classes",))
 def _majority_device(votes, num_classes: int):
     """(Npad, W) -> (labels, confidence): one-hot counts + first-index
@@ -202,6 +210,20 @@ def _dawid_skene_device(votes, n, num_classes: int, em_iters: int,
     return post, conf, prior
 
 
+@dataclasses.dataclass
+class ResidentVotes:
+    """A request batch's padded vote matrix, resident on device.
+
+    ``upload`` pays the full (Npad, W) h2d once per batch;
+    :meth:`VoteAggregator.scatter` then updates only the rows an
+    adaptive top-up round changed (mirroring ``FitEngine``'s
+    ``extend_resident`` delta-upload convention), so re-aggregating
+    after a top-up never re-materializes or re-uploads the matrix."""
+
+    dev: jax.Array   # (Npad, W) int32, -1 = no vote (padding rows too)
+    n: int           # valid rows
+
+
 class VoteAggregator:
     """Device-resident aggregation engine for one ``num_classes``.
 
@@ -211,6 +233,13 @@ class VoteAggregator:
     program and trim back to N.  The (n_mb, mb) buckets swept so far are
     the compile-cache key set (``cache_keys()``), matching the other
     engines' checkpoint convention.
+
+    The resident path (``upload``/``scatter``/``aggregate_resident``)
+    keeps one batch's padded matrix on device across adaptive top-up
+    rounds: the service uploads once, scatters only updated rows, and
+    re-aggregates from the resident buffer — exact-agreement with the
+    re-upload path by construction (identical values through the same
+    compiled programs; ``tests/test_annotation.py`` asserts it).
     """
 
     def __init__(self, num_classes: int,
@@ -237,19 +266,46 @@ class VoteAggregator:
         """Sorted (n_mb, mb) pack buckets aggregated so far."""
         return sorted(self.pack_keys)
 
-    # -- public API --------------------------------------------------------
-    def majority(self, votes) -> Tuple[np.ndarray, np.ndarray]:
-        """Device majority vote -> host ``(labels, confidence)``; exact
-        twin of :func:`majority_vote_host` including the tie-break."""
+    # -- the resident batch path -------------------------------------------
+    def upload(self, votes) -> ResidentVotes:
+        """Pad + upload one batch's host vote matrix — the single full
+        h2d a request batch pays (top-up rounds :meth:`scatter` deltas
+        into the returned buffer instead of re-uploading)."""
         vd, n = self._pad(votes)
+        return ResidentVotes(dev=vd, n=n)
+
+    def scatter(self, res: ResidentVotes, rows, vals) -> ResidentVotes:
+        """Scatter updated rows into the resident matrix: ``rows`` (k,)
+        row indices, ``vals`` (k, W) their new vote rows.  The row count
+        is padded to a pow2 bucket by REPEATING the first row (duplicate
+        identical-value scatters are idempotent), so growing top-up
+        activity reuses O(log k) compiled scatter programs."""
+        rows = np.asarray(rows, np.int32)
+        vals = np.asarray(vals, np.int32)
+        k = len(rows)
+        if k == 0:
+            return res
+        k_pad = 8
+        while k_pad < k:
+            k_pad *= 2
+        if k_pad > k:
+            rows = np.concatenate([rows, np.full(k_pad - k, rows[0],
+                                                 np.int32)])
+            vals = np.concatenate([vals, np.repeat(vals[:1], k_pad - k,
+                                                   axis=0)])
+        return ResidentVotes(
+            dev=_scatter_rows(res.dev, jnp.asarray(rows),
+                              jnp.asarray(vals)),
+            n=res.n)
+
+    # -- the compiled programs (device in, host out) -----------------------
+    def _majority_dev(self, vd: jax.Array, n: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
         labels, conf = _majority_device(vd, self.num_classes)
         return (np.asarray(labels[:n], np.int64),
                 np.asarray(conf[:n], np.float64))
 
-    def dawid_skene(self, votes) -> DSResult:
-        """Device Dawid-Skene EM -> host :class:`DSResult`; atol-twin of
-        :func:`dawid_skene_host` with identical argmax labels."""
-        vd, n = self._pad(votes)
+    def _dawid_skene_dev(self, vd: jax.Array, n: int) -> DSResult:
         post, conf, prior = _dawid_skene_device(
             vd, jnp.int32(n), self.num_classes, self.cfg.em_iters,
             float(self.cfg.smoothing))
@@ -261,6 +317,19 @@ class VoteAggregator:
             confusion=np.asarray(conf, np.float64),
             prior=np.asarray(prior, np.float64))
 
+    # -- public API --------------------------------------------------------
+    def majority(self, votes) -> Tuple[np.ndarray, np.ndarray]:
+        """Device majority vote -> host ``(labels, confidence)``; exact
+        twin of :func:`majority_vote_host` including the tie-break."""
+        vd, n = self._pad(votes)
+        return self._majority_dev(vd, n)
+
+    def dawid_skene(self, votes) -> DSResult:
+        """Device Dawid-Skene EM -> host :class:`DSResult`; atol-twin of
+        :func:`dawid_skene_host` with identical argmax labels."""
+        vd, n = self._pad(votes)
+        return self._dawid_skene_dev(vd, n)
+
     def aggregate(self, votes, method: str = "majority"
                   ) -> Tuple[np.ndarray, np.ndarray, Optional[DSResult]]:
         """One entry point for the service: ``(labels, confidence,
@@ -271,4 +340,18 @@ class VoteAggregator:
         if method == "ds":
             res = self.dawid_skene(votes)
             return res.labels, res.confidence, res
+        raise ValueError(f"unknown aggregation method {method!r}")
+
+    def aggregate_resident(self, res: ResidentVotes, method: str = "majority"
+                           ) -> Tuple[np.ndarray, np.ndarray,
+                                      Optional[DSResult]]:
+        """:meth:`aggregate` over an already-resident batch — the same
+        compiled programs over the same buffer contents, so the labels /
+        confidences are bit-identical to re-uploading the host matrix."""
+        if method == "majority":
+            labels, conf = self._majority_dev(res.dev, res.n)
+            return labels, conf, None
+        if method == "ds":
+            out = self._dawid_skene_dev(res.dev, res.n)
+            return out.labels, out.confidence, out
         raise ValueError(f"unknown aggregation method {method!r}")

@@ -42,14 +42,14 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.annotation.aggregate import AggregateConfig, VoteAggregator
 from repro.annotation.oracle import AnnotatorPool
 from repro.core.cost import CostLedger, LabelQuality, LabelingService
+from repro.core.worker import SerialWorker
 # the sweep runtime's async handle, shared rather than mirrored (the same
 # convention FitEngine follows) so worker-handle hardening lands once
 from repro.serving.sweep import SweepFuture as AnnotationFuture
@@ -127,14 +127,16 @@ class AnnotationService:
         self._conf_sum = 0.0                   # sum of per-item aggregated
         self._conf_n = 0                       # confidence (residual est.)
         self._confusion_est: Optional[np.ndarray] = None  # last EM (W,C,C)
-        self._exec: Optional[ThreadPoolExecutor] = None
+        self._exec: Optional[SerialWorker] = None
         # one batch at a time: direct annotate() calls and brokered
         # submit() batches serialize here, so the cursor advance, the
         # ledger's read-modify-writes, and the worker statistics can
-        # never interleave.  (A campaign-attached service is still OWNED
-        # by that campaign: SharedPool.buy_labels attributes the votes-
-        # bought delta of its own call, so interleaving purchases from a
-        # second ledger against one service is not a supported shape.)
+        # never interleave.  A service shared by several campaigns hands
+        # each one an :class:`AnnotationSession` (per-tenant cursor +
+        # vote accounting); attaching the bare service to two campaigns
+        # remains unsupported, because the votes-bought delta
+        # ``SharedPool.buy_labels`` reads would see the other buyer's
+        # requests.
         self._lock = threading.Lock()
 
     def attach_trace(self, trace) -> None:
@@ -261,16 +263,35 @@ class AnnotationService:
         phantom state and a retried one replays identically.  Adaptive
         top-up rounds are best-effort within the remaining budget: an
         unaffordable round just stops the topping-up."""
-        with self._lock:
-            return self._annotate_locked(np.asarray(idx, np.int64),
-                                         np.asarray(true_labels, np.int64))
+        labels, _votes = self.annotate_counted(idx, true_labels)
+        return labels
 
-    def _annotate_locked(self, idx: np.ndarray, true: np.ndarray
-                         ) -> np.ndarray:
+    def annotate_counted(self, idx: np.ndarray, true_labels: np.ndarray
+                         ) -> Tuple[np.ndarray, int]:
+        """:meth:`annotate` plus the EXACT priced vote count this call
+        consumed, measured inside the lock — the per-call accounting the
+        votes-bought delta protocol approximates from outside it."""
+        with self._lock:
+            labels, votes, self._cursor = self._annotate_locked(
+                np.asarray(idx, np.int64),
+                np.asarray(true_labels, np.int64),
+                self._cursor, self.policy)
+        return labels, votes
+
+    def _annotate_locked(self, idx: np.ndarray, true: np.ndarray,
+                         cursor: int, pol: RepeatPolicy
+                         ) -> Tuple[np.ndarray, int, int]:
+        """One request batch under the lock: ``(labels, votes_spent,
+        next_cursor)``.  The cursor is threaded through (not read off
+        ``self``) so per-tenant :class:`AnnotationSession` cursors make
+        each tenant's worker schedule — hence its vote streams — a pure
+        function of its OWN request history, independent of how sibling
+        tenants interleave on the shared service.  Likewise the policy is
+        a parameter: sessions may carry a downgraded (fewer-repeats)
+        policy while the service default stays put."""
         N = len(idx)
         if N == 0:
-            return np.zeros((0,), np.int64)
-        pol = self.policy
+            return np.zeros((0,), np.int64), 0, cursor
         if not self._within_budget(N * pol.repeats):
             due = self.pricing.cost(N * pol.repeats,
                                     start=self.ledger.human_votes)
@@ -278,16 +299,23 @@ class AnnotationService:
                 f"batch of {N} labels x {pol.repeats} votes (${due:.2f}) "
                 f"would exceed the ${self.budget:.2f} annotation budget "
                 f"(spent ${self.ledger.human:.2f})")
-        base, self._cursor = self._cursor, self._cursor + 1
+        base, cursor = cursor, cursor + 1
         # base rounds ARE the round-robin schedule the oracle exposes
         # (one shared implementation — tests/benchmarks build the exact
         # matrices campaigns aggregate through the same method)
         votes = self.pool.vote_matrix(idx, true, pol.repeats, base)
+        spent = N * pol.repeats
         self.ledger.pay_human(N, self.pricing, votes=N * pol.repeats)
         self._emit("vote_round", n=int(N), repeats=int(pol.repeats),
                    votes=int(N * pol.repeats), cursor=int(base),
                    aggregator=pol.aggregator)
-        labels, conf, ds = self.aggregator.aggregate(votes, pol.aggregator)
+        # the batch stays device-resident across top-up rounds: one full
+        # upload here, then only the rows a round changed scatter in
+        # (the FitEngine.extend_resident convention) — re-aggregation
+        # never re-materializes or re-uploads the (N, W) matrix
+        resident = self.aggregator.upload(votes)
+        labels, conf, ds = self.aggregator.aggregate_resident(
+            resident, pol.aggregator)
         if pol.adaptive:
             rows = np.arange(N)
             for r in range(pol.repeats, pol.cap):
@@ -296,11 +324,14 @@ class AnnotationService:
                         not self._within_budget(len(active)):
                     break
                 self.ledger.pay_votes(len(active), self.pricing)
+                spent += len(active)
                 self._emit("topup", round=int(r), n=int(len(active)),
                            cursor=int(base))
                 self._topup_round(votes, active, idx, true, base, r)
-                labels, conf, ds = self.aggregator.aggregate(
-                    votes, pol.aggregator)
+                resident = self.aggregator.scatter(resident, active,
+                                                   votes[active])
+                labels, conf, ds = self.aggregator.aggregate_resident(
+                    resident, pol.aggregator)
         # -- fold batch statistics into the service state ------------------
         # single-vote batches carry no quality signal (one vote always
         # "agrees" with its own aggregate and majority confidence is
@@ -325,13 +356,12 @@ class AnnotationService:
                        residual_error=float(
                            self.estimated_residual_error()),
                        avg_repeats=float(self.avg_repeats()))
-        return labels
+        return labels, spent, cursor
 
     # -- the broker --------------------------------------------------------
-    def _executor(self) -> ThreadPoolExecutor:
+    def _executor(self) -> SerialWorker:
         if self._exec is None:
-            self._exec = ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="annotation")
+            self._exec = SerialWorker("annotation")
         return self._exec
 
     def submit(self, idx: np.ndarray, true_labels: np.ndarray
@@ -344,6 +374,25 @@ class AnnotationService:
         true = np.asarray(true_labels, np.int64).copy()
         return AnnotationFuture(
             self._executor().submit(self.annotate, idx, true))
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Idempotent service shutdown: join the broker thread (no-op if
+        nothing was ever submitted).  ``submit`` afterwards raises;
+        synchronous ``annotate`` calls remain valid."""
+        if self._exec is not None:
+            self._exec.close()
+
+    def __enter__(self) -> "AnnotationService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def session(self, name: str = "tenant") -> "AnnotationSession":
+        """A per-tenant view of this service — the supported shape for
+        sharing one service across campaigns."""
+        return AnnotationSession(self, name)
 
     # -- fault tolerance ---------------------------------------------------
     def state_dict(self) -> Dict:
@@ -379,6 +428,159 @@ class AnnotationService:
         ce = s.get("confusion_est")
         self._confusion_est = None if ce is None \
             else np.asarray(ce, np.float64)
+
+
+class AnnotationSession:
+    """One tenant's view of a SHARED :class:`AnnotationService`.
+
+    The shared pieces stay on the service — the worker pool, the
+    aggregation engine and its compile cache, pricing, the service
+    ledger, the broker thread, the batch lock.  The per-tenant pieces
+    live here:
+
+    * the **request cursor**: the worker round-robin schedule (hence the
+      exact vote stream each item sees) is a pure function of this
+      session's own request history, so a tenant's labels are
+      bit-identical whether sibling tenants interleave with it or not,
+      and a preempted-and-resumed tenant never perturbs its siblings;
+    * the **vote/label counters** ``SharedPool.buy_labels`` charges
+      against: the ``votes_bought`` delta a campaign reads across one
+      ``human_label`` call can only ever see this session's requests —
+      charges cannot cross-talk (tests/test_orchestrator.py proves it
+      under interleaved submits);
+    * an optional **policy override** (the fleet controller's
+      ``shrink_votes`` downgrade swaps in a fewer-repeats policy for
+      this tenant only).
+
+    A session satisfies the same task-facing surface the bare service
+    does (``annotate``/``submit``/``votes_bought``/``state_dict``/
+    quality estimators), so ``task.annotation = service.session(...)``
+    is a drop-in."""
+
+    def __init__(self, service: AnnotationService, name: str = "tenant"):
+        self.service = service
+        self.name = name
+        self._cursor = 0
+        self._votes = 0
+        self._labels = 0
+        self._policy: Optional[RepeatPolicy] = None
+        self.trace = None
+
+    # -- shared-surface delegation -----------------------------------------
+    @property
+    def pool(self) -> AnnotatorPool:
+        return self.service.pool
+
+    @property
+    def pricing(self) -> LabelingService:
+        return self.service.pricing
+
+    @property
+    def policy(self) -> RepeatPolicy:
+        return self._policy or self.service.policy
+
+    def expected_quality(self) -> LabelQuality:
+        return self.service.expected_quality()
+
+    def calibrate(self, n: int = 2048) -> LabelQuality:
+        return self.service.calibrate(n)
+
+    def estimated_residual_error(self) -> float:
+        return self.service.estimated_residual_error()
+
+    def worker_accuracy(self) -> np.ndarray:
+        return self.service.worker_accuracy()
+
+    def confusion_estimate(self) -> Optional[np.ndarray]:
+        return self.service.confusion_estimate()
+
+    # -- per-tenant accounting ---------------------------------------------
+    @property
+    def votes_bought(self) -> int:
+        """THIS session's priced requests (the ``buy_labels`` delta
+        protocol reads this — sibling sessions never move it)."""
+        return self._votes
+
+    @property
+    def labels_bought(self) -> int:
+        return self._labels
+
+    @property
+    def request_cursor(self) -> int:
+        return self._cursor
+
+    def avg_repeats(self) -> float:
+        if self._labels == 0:
+            return float(self.policy.repeats)
+        return self._votes / self._labels
+
+    def set_policy(self, policy: Optional[RepeatPolicy]) -> None:
+        """Install a per-tenant policy override (None restores the
+        service default) — the fleet controller's vote-shrink hook."""
+        if policy is not None:
+            assert policy.cap <= self.service.pool.n_workers
+        self._policy = policy
+
+    # -- the request path --------------------------------------------------
+    def annotate(self, idx: np.ndarray, true_labels: np.ndarray
+                 ) -> np.ndarray:
+        """One request batch through the shared service, scheduled off
+        THIS session's cursor.  Batches still serialize on the service
+        lock; the session's counters update on the calling thread (one
+        tenant drives one session — sessions are not themselves
+        concurrency-safe, the service is)."""
+        idx = np.asarray(idx, np.int64)
+        true = np.asarray(true_labels, np.int64)
+        with self.service._lock:
+            labels, votes, self._cursor = self.service._annotate_locked(
+                idx, true, self._cursor, self.policy)
+        self._votes += votes
+        self._labels += len(idx)
+        if self.trace is not None:
+            self.trace.emit("vote_round", session=self.name,
+                            n=int(len(idx)), votes=int(votes),
+                            cursor=int(self._cursor - 1))
+        return labels
+
+    def submit(self, idx: np.ndarray, true_labels: np.ndarray
+               ) -> AnnotationFuture:
+        """Broker a batch onto the shared service worker thread.  The
+        session's cursor/counters update on that worker before the
+        future resolves, so a tenant that synchronizes at ``result()``
+        reads its own accounting consistently."""
+        idx = np.asarray(idx, np.int64).copy()
+        true = np.asarray(true_labels, np.int64).copy()
+        return AnnotationFuture(
+            self.service._executor().submit(self.annotate, idx, true))
+
+    # -- lifecycle ---------------------------------------------------------
+    def attach_trace(self, trace) -> None:
+        """Per-tenant observability only: the session emits its own vote
+        rounds into the tenant trace.  The SHARED service ledger and
+        batch telemetry are deliberately NOT wired here — their events
+        interleave every tenant's requests and belong to the fleet
+        trace, not to any one tenant's decision stream."""
+        self.trace = trace
+
+    def close(self) -> None:
+        """Sessions do not own the broker thread — closing one is a
+        no-op (the service/fleet owner closes the service)."""
+
+    # -- fault tolerance ---------------------------------------------------
+    def state_dict(self) -> Dict:
+        """Per-tenant session state only (cursor + counters): a resumed
+        tenant replays ITS schedule bit-identically from here.  The
+        shared service's state is fleet infrastructure and is persisted
+        by the service owner, not per tenant."""
+        return {"session": True, "cursor": int(self._cursor),
+                "votes": int(self._votes), "labels": int(self._labels)}
+
+    def load_state_dict(self, s: Dict):
+        assert s.get("session"), \
+            "checkpoint carries bare-service state, not a session's"
+        self._cursor = int(s["cursor"])
+        self._votes = int(s["votes"])
+        self._labels = int(s["labels"])
 
 
 def make_annotation_service(

@@ -9,6 +9,7 @@ Public API:
     joint_search / budget_search      (|B|, theta) optimization
     PoolScoringEngine                 device-resident pool-scoring sweep
     k_center_greedy_device            device-resident k-center M(.) engine
+    TenantSpec / Tenant / FleetController   multi-tenant fleet accounting
 """
 from repro.core.cost import (AMAZON, SATYAM, SERVICES, CostLedger,
                              LabelQuality, LabelingService, TrainCostModel)
@@ -23,4 +24,7 @@ from repro.core.scoring import (PoolScoringEngine, ScoringConfig,
 from repro.core.selection_device import (KCenterConfig,
                                          k_center_greedy_device)
 from repro.core.task import LiveTask
+from repro.core.tenant import (FLEET_KINDS, FleetController, Tenant,
+                               TenantSpec, downgrade_sequence)
+from repro.core.worker import SerialWorker, WorkerClosed
 from repro.core import selection  # noqa: F401

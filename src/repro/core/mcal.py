@@ -788,6 +788,24 @@ class MCALCampaign:
             self.iteration()
         return self.commit()
 
+    def close(self) -> None:
+        """Idempotent campaign teardown: cancel any in-flight async sweep
+        or retrain, then join the task's owned broker threads (shared
+        fleet engines stay up — the fleet owns them).  A closed campaign
+        keeps its results; only its async machinery is gone."""
+        self._drop_pending()
+        if self._fit_pending is not None:
+            self._fit_pending[1].cancel()
+            self._fit_pending = None
+        if hasattr(self.task, "close"):
+            self.task.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
     # -- campaign fault tolerance ------------------------------------------
     def state_dict(self) -> Dict:
         """JSON-serializable loop state: a preempted labeling campaign

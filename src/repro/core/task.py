@@ -73,15 +73,47 @@ class LiveTask:
     mesh: Optional[object] = None    # host/device mesh: microbatch dim of
                                      # the scoring sweep + the fused-fit
                                      # program shard over its "data" axis
-    annotation: Optional[object] = None  # AnnotationService: route
+    annotation: Optional[object] = None  # AnnotationService (or a shared
+                                     # service's AnnotationSession): route
                                      # human_label through a noisy multi-
                                      # annotator oracle (None = the
                                      # paper's perfect-label assumption)
+    engines: Optional[object] = None  # launch.orchestrator.SharedEngines:
+                                     # reuse a fleet's scoring/sweep/fit
+                                     # engine families (and their pow2
+                                     # compile caches) instead of building
+                                     # per-task ones.  Requires matching
+                                     # model/data shapes; the fleet owns
+                                     # the engine lifecycle.
 
     def __post_init__(self):
+        self.pool_size = len(self.features)
+        if self.engines is not None:
+            # shared-engine fleet mode: adopt the bundle's model + train
+            # config so this task's params are exactly what the bundle's
+            # compiled programs were built for.  Engines are stateless
+            # per call given params (the fused fit derives its state from
+            # the rng each call), so per-tenant results are bit-identical
+            # to owning private engines — EXCEPT the fit engine's
+            # resident pool, which is per-engine state and must stay off.
+            b = self.engines
+            assert not self.fit_resident, \
+                "fit_resident keeps per-engine state; unsupported with " \
+                "shared engines"
+            assert b.input_dim == self.features.shape[1] and \
+                b.num_classes == self.num_classes, \
+                "shared engines were built for a different data shape"
+            self.cfg = b.cfg
+            self.model = b.model
+            self.tc = b.tc
+            self._engine = b.scoring
+            self._sweep = b.sweep
+            self._fit = b.fit
+            self._params = None
+            self._res_idx = np.zeros((0,), np.int64)
+            return
         from repro.configs.base import ModelConfig, TrainConfig
         from repro.models.registry import get_model
-        self.pool_size = len(self.features)
         cfg = ModelConfig(
             name=f"{self.arch_name}-live", family="mlp",
             num_layers=self.depth, d_model=self.hidden,
@@ -115,9 +147,27 @@ class LiveTask:
     def attach_trace(self, trace) -> None:
         """Wire the campaign event bus into this task's runtimes: the
         paged sweep runner (page cursors, sink finalizations) and the fit
-        engine (submit/fold timestamps for async retrains)."""
+        engine (submit/fold timestamps for async retrains).  SHARED
+        engines are left unwired — their telemetry interleaves every
+        tenant's jobs and belongs to the fleet's observability, not to
+        one tenant's trace (all of it is OBSERVABILITY_KINDS, so tenant
+        decision streams stay complete without it)."""
+        if self.engines is not None:
+            return
         self._sweep.trace = trace
         self._fit.trace = trace
+
+    def close(self) -> None:
+        """Idempotent task teardown: join the OWNED engines' broker
+        threads (shared engines belong to the fleet; the annotation
+        service/session closes itself — a session's close is a no-op,
+        a privately attached service's joins its broker)."""
+        if self.engines is None:
+            self._sweep.close()
+            self._fit.close()
+        ann = self.annotation
+        if ann is not None and hasattr(ann, "close"):
+            ann.close()
 
     # -- annotation service ------------------------------------------------
     def human_label(self, idx: np.ndarray) -> np.ndarray:

@@ -1,0 +1,104 @@
+"""The engine broker thread: one daemonized serial worker per runtime.
+
+``PoolSweepRunner.submit``, ``FitEngine.submit_fit``/``submit_call`` and
+``AnnotationService.submit`` all broker jobs onto a single worker thread
+and hand back a :class:`~repro.serving.sweep.SweepFuture`.  The seed
+implementation grew one lazy ``ThreadPoolExecutor`` per engine, whose
+worker threads are neither daemonized nor ever joined — an abandoned
+future kept the interpreter alive at exit (concurrent.futures joins its
+workers atexit), and a fleet of campaigns leaked one thread per engine.
+
+:class:`SerialWorker` is the shared replacement:
+
+* the worker thread is a **daemon** — an abandoned in-flight job can
+  never hang interpreter shutdown;
+* ``submit`` preserves the executor surface the engines already use
+  (it returns a ``concurrent.futures.Future``, so ``SweepFuture``'s
+  done/cancel/result semantics are unchanged — cancelling a queued job
+  still works through ``Future.set_running_or_notify_cancel``);
+* ``close()`` is the missing join: idempotent, drains the queue sentinel
+  and joins the thread, after which ``submit`` raises.  Every engine
+  exposes it (plus the context-manager sugar), and campaign teardown
+  calls it — the shutdown regression tests in
+  ``tests/test_shutdown.py`` pin both properties.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Optional
+
+
+class WorkerClosed(RuntimeError):
+    """``submit`` after ``close()`` — the broker thread is gone."""
+
+
+class SerialWorker:
+    """One daemon thread draining a FIFO job queue into Futures.
+
+    The thread is started lazily on the first ``submit`` (engines that
+    never go async never pay for a thread) and named so thread dumps
+    attribute stuck jobs to their engine.
+    """
+
+    def __init__(self, name: str = "serial-worker"):
+        self._name = name
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        self._lock = threading.Lock()
+
+    # -- the executor surface ----------------------------------------------
+    def submit(self, fn, *args, **kw) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise WorkerClosed(
+                    f"{self._name}: submit after close() — the broker "
+                    f"thread has been joined")
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, name=self._name, daemon=True)
+                self._thread.start()
+            self._q.put((fut, fn, args, kw))
+        return fut
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:          # the close() sentinel
+                return
+            fut, fn, args, kw = item
+            if not fut.set_running_or_notify_cancel():
+                continue              # cancelled while queued
+            try:
+                fut.set_result(fn(*args, **kw))
+            except BaseException as e:   # delivered at result()
+                fut.set_exception(e)
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def alive(self) -> bool:
+        """True while the worker thread exists and has not been joined."""
+        return self._thread is not None and self._thread.is_alive()
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Idempotent shutdown: finish queued jobs, join the thread.
+        Safe to call on a worker that never started (no thread, no-op
+        beyond flipping the closed flag)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            thread = self._thread
+            if thread is not None:
+                self._q.put(None)
+        if thread is not None:
+            thread.join(timeout)
+
+    def __enter__(self) -> "SerialWorker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

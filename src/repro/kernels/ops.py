@@ -27,11 +27,26 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# case-insensitive REPRO_USE_PALLAS vocabularies; anything outside them
+# is a hard error — a typo like "ture" or an unsupported spelling used
+# to fall through to False silently, running the jnp reference path on a
+# host that asked for kernels
+_PALLAS_TRUTHY = frozenset({"1", "true", "yes", "on"})
+_PALLAS_FALSY = frozenset({"0", "false", "no", "off"})
+
+
 def use_pallas() -> bool:
     env = os.environ.get("REPRO_USE_PALLAS", "auto")
-    if env == "auto":
+    val = env.strip().lower()
+    if val in ("", "auto"):       # "" = exported-but-empty: unset intent
         return jax.default_backend() == "tpu"
-    return env in ("1", "true", "yes")
+    if val in _PALLAS_TRUTHY:
+        return True
+    if val in _PALLAS_FALSY:
+        return False
+    raise ValueError(
+        f"REPRO_USE_PALLAS={env!r} is not a recognized setting: use one "
+        f"of {sorted(_PALLAS_TRUTHY)} / {sorted(_PALLAS_FALSY)} / 'auto'")
 
 
 def score_head(hidden: jax.Array, w_vocab: jax.Array, *,

@@ -264,6 +264,11 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
             os.remove(state_path)   # campaign complete: the state is spent
         return res, camp
     finally:
+        # teardown order matters: close the campaign first (joins the
+        # sweep/fit/annotation broker threads, so nothing can emit), then
+        # the trace.  A partial run (iters_per_run) exits the process
+        # after this anyway — resume rebuilds the brokers lazily.
+        camp.close()
         if trace is not None:
             trace.close()
 

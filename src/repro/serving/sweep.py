@@ -65,9 +65,10 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
-from concurrent.futures import ThreadPoolExecutor
 from types import SimpleNamespace
 from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.worker import SerialWorker
 
 import numpy as np
 
@@ -450,7 +451,7 @@ class PoolSweepRunner:
         assert cfg.page_rows > 0
         self.adapter = adapter
         self.cfg = cfg
-        self._exec: Optional[ThreadPoolExecutor] = None
+        self._exec: Optional[SerialWorker] = None
         # campaign event bus (observability only: page cursors + sink
         # finalizations; emits may come from the runner's worker thread)
         self.trace = None
@@ -536,12 +537,26 @@ class PoolSweepRunner:
         like feature-sweep + device k-center that end in a sweep)."""
         return SweepFuture(self._executor().submit(fn, *args, **kw))
 
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Idempotent runner shutdown: join the sweep worker thread (a
+        no-op if no sweep was ever submitted).  ``submit`` afterwards
+        raises — synchronous ``run`` calls remain valid."""
+        if self._exec is not None:
+            self._exec.close()
+
+    def __enter__(self) -> "PoolSweepRunner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- internals -----------------------------------------------------------
 
-    def _executor(self) -> ThreadPoolExecutor:
+    def _executor(self) -> SerialWorker:
         if self._exec is None:
-            self._exec = ThreadPoolExecutor(max_workers=1,
-                                            thread_name_prefix="pool-sweep")
+            self._exec = SerialWorker("pool-sweep")
         return self._exec
 
     def _restore(self, sink, n: int,

@@ -49,8 +49,9 @@ without changing the scan.
 from __future__ import annotations
 
 import dataclasses
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.worker import SerialWorker
 
 import numpy as np
 
@@ -139,7 +140,7 @@ class FitEngine:
         # directly — a warmed bucket never traces or compiles again
         self._compiled: Dict[Tuple[int, int, int], Any] = {}
         self._ref_step = None
-        self._exec: Optional[ThreadPoolExecutor] = None
+        self._exec: Optional[SerialWorker] = None
         # campaign-resident labeled pool: device buffers + valid row count
         self._res_x: Optional[jax.Array] = None
         self._res_y: Optional[jax.Array] = None
@@ -282,11 +283,23 @@ class FitEngine:
 
     # -- async handle --------------------------------------------------------
 
-    def _executor(self) -> ThreadPoolExecutor:
+    def _executor(self) -> SerialWorker:
         if self._exec is None:
-            self._exec = ThreadPoolExecutor(max_workers=1,
-                                            thread_name_prefix="fit-engine")
+            self._exec = SerialWorker("fit-engine")
         return self._exec
+
+    def close(self) -> None:
+        """Idempotent engine shutdown: join the fit worker thread (no-op
+        if nothing was ever submitted).  ``submit_fit``/``submit_call``
+        afterwards raise — synchronous ``fit`` calls remain valid."""
+        if self._exec is not None:
+            self._exec.close()
+
+    def __enter__(self) -> "FitEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _traced(self, fn: Callable, label: str) -> Callable:
         """Bracket a worker-thread job with fit_submit/fit_done events —

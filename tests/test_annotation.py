@@ -206,6 +206,77 @@ def test_vote_counts_host_ignores_missing():
 
 
 # ---------------------------------------------------------------------------
+# resident vote matrices: upload once, scatter deltas, aggregate in place
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,workers,classes,repeats", [
+    (1, 3, 2, 3), (60, 5, 10, 3), (513, 5, 10, 3), (100, 7, 4, 5),
+])
+@pytest.mark.parametrize("method", ["majority", "ds"])
+def test_resident_aggregate_bit_identical_to_reupload(n, workers, classes,
+                                                      repeats, method):
+    """``aggregate_resident`` over an uploaded batch is the SAME compiled
+    program over the same buffer contents as ``aggregate`` re-uploading
+    the host matrix — bit-identical outputs, not just close ones."""
+    votes, _, _ = _vote_matrix(n, workers, classes, repeats, seed=n)
+    agg = VoteAggregator(classes, AggregateConfig(microbatch=256))
+    res = agg.upload(votes)
+    lr, cr, dsr = agg.aggregate_resident(res, method)
+    lh, ch, dsh = agg.aggregate(votes, method)
+    np.testing.assert_array_equal(lr, lh)
+    np.testing.assert_array_equal(cr, ch)     # bit-equal, no atol
+    if method == "ds":
+        np.testing.assert_array_equal(dsr.posterior, dsh.posterior)
+        np.testing.assert_array_equal(dsr.confusion, dsh.confusion)
+
+
+@pytest.mark.parametrize("k", [1, 5, 8, 23])   # ragged + pow2 row counts
+def test_resident_scatter_matches_host_after_row_updates(k):
+    """A top-up round scatters only its changed rows; aggregating the
+    resident buffer must agree with the host oracles over the UPDATED
+    matrix exactly (majority bit-equal, DS atol with identical argmax)."""
+    n, workers, classes = 120, 7, 5
+    votes, gt, pool = _vote_matrix(n, workers, classes, 3, seed=k)
+    agg = VoteAggregator(classes, AggregateConfig(microbatch=256))
+    res = agg.upload(votes)
+    # the top-up: k rows gain two more votes each
+    rows = np.random.default_rng(k).choice(n, size=k, replace=False)
+    updated = votes.copy()
+    updated[rows] = pool.vote_matrix(rows, gt[rows], 5)
+    res = agg.scatter(res, rows, updated[rows])
+
+    lr, cr, _ = agg.aggregate_resident(res, "majority")
+    lh, ch = majority_vote_host(updated, classes)
+    np.testing.assert_array_equal(lr, lh)
+    np.testing.assert_allclose(cr, ch, atol=1e-7)
+
+    _, _, dsr = agg.aggregate_resident(res, "ds")
+    dsh = dawid_skene_host(updated, classes)
+    np.testing.assert_array_equal(dsr.labels, dsh.labels)
+    np.testing.assert_allclose(dsr.posterior, dsh.posterior, atol=1e-4)
+    # untouched rows kept their original votes on device
+    keep = np.setdiff1d(np.arange(n), rows)
+    np.testing.assert_array_equal(np.asarray(res.dev)[keep], votes[keep])
+
+
+def test_resident_scatter_empty_and_padding_are_idempotent():
+    votes, _, _ = _vote_matrix(40, 5, 4, 3, seed=9)
+    agg = VoteAggregator(4)
+    res = agg.upload(votes)
+    before = np.asarray(res.dev).copy()
+    # k=0 is a no-op returning the same buffer
+    assert agg.scatter(res, np.zeros(0, np.int32),
+                       np.zeros((0, 5), np.int32)) is res
+    # k=3 pads to 8 by repeating row 0 — the duplicate scatters must not
+    # corrupt anything (same value lands on the same row repeatedly)
+    rows = np.asarray([4, 17, 4], np.int32)      # a repeated row too
+    vals = np.stack([votes[4], votes[17], votes[4]])
+    res2 = agg.scatter(res, rows, vals)
+    np.testing.assert_array_equal(np.asarray(res2.dev), before)
+
+
+# ---------------------------------------------------------------------------
 # the service: charging, adaptive repeats, broker, persistence
 # ---------------------------------------------------------------------------
 

@@ -89,3 +89,46 @@ def test_ops_dispatch():
     np.testing.assert_allclose(np.asarray(a.margin), np.asarray(b.margin),
                                atol=1e-4)
     assert (np.asarray(a.top1) == np.asarray(b.top1)).all()
+
+
+# -- REPRO_USE_PALLAS normalization ------------------------------------------
+# regression for the silent-fallback bug: unrecognized spellings used to
+# fall through to False, quietly running the jnp reference path on a
+# host that had asked for kernels.
+
+@pytest.mark.parametrize("raw", [
+    "1", "true", "yes", "on", "TRUE", "Yes", "ON", " true ", "\ton\t",
+])
+def test_use_pallas_truthy(monkeypatch, raw):
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_USE_PALLAS", raw)
+    assert ops.use_pallas() is True
+
+
+@pytest.mark.parametrize("raw", [
+    "0", "false", "no", "off", "FALSE", "No", "OFF", " false ", "\toff\t",
+])
+def test_use_pallas_falsy(monkeypatch, raw):
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_USE_PALLAS", raw)
+    assert ops.use_pallas() is False
+
+
+@pytest.mark.parametrize("raw", [None, "", "  ", "auto", "AUTO", " Auto "])
+def test_use_pallas_auto_follows_backend(monkeypatch, raw):
+    """Unset, exported-but-empty, and every 'auto' spelling all mean the
+    same thing: kernels iff the backend is a TPU."""
+    from repro.kernels import ops
+    if raw is None:
+        monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    else:
+        monkeypatch.setenv("REPRO_USE_PALLAS", raw)
+    assert ops.use_pallas() is (jax.default_backend() == "tpu")
+
+
+@pytest.mark.parametrize("raw", ["ture", "2", "enable", "y", "n", "none"])
+def test_use_pallas_rejects_unrecognized(monkeypatch, raw):
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_USE_PALLAS", raw)
+    with pytest.raises(ValueError, match="REPRO_USE_PALLAS"):
+        ops.use_pallas()

@@ -1,0 +1,453 @@
+"""Multi-tenant orchestrator: shared engines, fleet budgets, isolation.
+
+Three layers:
+
+* **acceptance** — an N=8 concurrent fleet over ONE shared engine bundle
+  produces per-tenant decision streams bit-identical to the same fleet
+  run serially (``trace.replay.diff`` clean per tenant), and an
+  over-ceiling fleet executes the downgrade cascade deterministically
+  (equal ``downgrade_sequence``s, fleet traces diff-clean under
+  ``FLEET_KINDS``);
+* **controller units** — redistribution and cascade ordering over
+  hand-set ledgers (no campaigns, pure accounting);
+* **session isolation** — interleaved ``submit``s from two sessions of
+  ONE shared AnnotationService keep per-tenant charges and vote streams
+  bit-identical to each session running alone, including across a
+  preempt/resume of one session.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import MCALConfig
+from repro.core.tenant import (DOWNGRADE_ACTIONS, FLEET_KINDS,
+                               FleetController, TenantSpec,
+                               downgrade_sequence)
+from repro.trace.replay import diff
+from repro.trace.store import read_trace
+
+POOL = 320
+CLASSES = 3
+ENGINE_KW = dict(epochs=2, score_microbatch=128, sweep_page=128)
+
+
+def _data(n=POOL, seed=0):
+    from repro.data.synth import make_classification
+    return make_classification(n, num_classes=CLASSES, difficulty=0.3,
+                               seed=seed)
+
+
+def _cfg(**kw):
+    base = dict(max_iters=2, delta0_frac=0.1, test_frac=0.2)
+    base.update(kw)
+    return MCALConfig(**base)
+
+
+def _run_fleet(tmpdir, specs, *, concurrent, global_budget=None,
+               annotation=None):
+    from repro.core import AMAZON
+    from repro.launch.orchestrator import build_fleet
+    x, y = _data()
+    orch = build_fleet(x, y, specs, service=AMAZON,
+                       global_budget=global_budget, trace_dir=tmpdir,
+                       concurrent=concurrent,
+                       annotation_service=annotation,
+                       engine_kw=ENGINE_KW)
+    try:
+        results = orch.run()
+    finally:
+        orch.close()
+    return results, orch
+
+
+# ---------------------------------------------------------------------------
+# acceptance: N=8 concurrent == N=8 serial, per-tenant, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_fleet_matches_serial_n8(tmp_path):
+    specs = [TenantSpec(f"t{i}", priority=i % 3, seed=i,
+                        cfg=_cfg(seed=i, eps_target=0.05 + 0.01 * (i % 4)))
+             for i in range(8)]
+    d1, d2 = str(tmp_path / "conc"), str(tmp_path / "serial")
+    res_c, orch_c = _run_fleet(d1, specs, concurrent=True)
+    res_s, orch_s = _run_fleet(d2, specs, concurrent=False)
+
+    assert set(res_c) == {s.tenant_id for s in specs} == set(res_s)
+    for s in specs:
+        d = diff(os.path.join(d1, f"{s.tenant_id}.jsonl"),
+                 os.path.join(d2, f"{s.tenant_id}.jsonl"))
+        assert d is None, f"{s.tenant_id} diverged: {d}"
+        assert res_c[s.tenant_id].decision == res_s[s.tenant_id].decision
+        assert res_c[s.tenant_id].total_cost == \
+            pytest.approx(res_s[s.tenant_id].total_cost)
+
+    # the whole fleet shared ONE compile cache — matched-shape tenants
+    # never compiled per-tenant programs (8 tenants, one engine bundle)
+    assert orch_c.engines.compiled_count() > 0
+    assert orch_c.engines.compiled_count() == orch_s.engines.compiled_count()
+
+
+def test_shared_engines_refuse_mismatched_shapes():
+    from repro.core.task import LiveTask
+    from repro.launch.orchestrator import SharedEngines
+    x, y = _data()
+    with SharedEngines.build(x.shape[1], CLASSES, **ENGINE_KW) as eng:
+        with pytest.raises(AssertionError):
+            LiveTask(features=x[:, :-1], groundtruth=y,
+                     num_classes=CLASSES, engines=eng)
+        with pytest.raises(AssertionError):
+            LiveTask(features=x, groundtruth=y, num_classes=CLASSES,
+                     engines=eng, fit_resident=True)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the downgrade cascade is deterministic and replayable
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cascade_runs(tmp_path_factory):
+    """The same over-ceiling fleet twice: per-tenant budgets too small,
+    a global ceiling the asks breach, a shared annotation service so
+    shrink_votes has repeats to halve."""
+    from repro.annotation import make_annotation_service
+
+    def run(d):
+        ann = make_annotation_service(CLASSES, n_workers=5, noise=0.2,
+                                      repeats=3, seed=0)
+        quality = ann.expected_quality()
+        specs = [TenantSpec(f"t{i}", priority=i, budget=6.0, seed=i,
+                            cfg=_cfg(max_iters=3, seed=i,
+                                     label_quality=quality))
+                 for i in range(3)]
+        res, orch = _run_fleet(d, specs, concurrent=True,
+                               global_budget=14.0, annotation=ann)
+        return res
+
+    d1 = str(tmp_path_factory.mktemp("cascade1"))
+    d2 = str(tmp_path_factory.mktemp("cascade2"))
+    return d1, run(d1), d2, run(d2)
+
+
+def test_cascade_is_deterministic(cascade_runs):
+    d1, res1, d2, res2 = cascade_runs
+    seq1 = downgrade_sequence(os.path.join(d1, "fleet.jsonl"))
+    seq2 = downgrade_sequence(os.path.join(d2, "fleet.jsonl"))
+    assert seq1, "the ceiling never bound — no cascade to compare"
+    assert seq1 == seq2
+    # the fleet's full budget decision stream replays too
+    assert diff(os.path.join(d1, "fleet.jsonl"),
+                os.path.join(d2, "fleet.jsonl"),
+                kinds=FLEET_KINDS) is None
+    # relief order is least-destructive first, least-critical first
+    rank = {a: i for i, a in enumerate(DOWNGRADE_ACTIONS)}
+    per_round = {}
+    for ev in seq1:
+        per_round.setdefault(ev["round"], []).append(ev)
+    for evs in per_round.values():
+        assert [rank[e["action"]] for e in evs] == \
+            sorted(rank[e["action"]] for e in evs)
+
+
+def test_forced_tenants_finish_with_fleet_ceiling_reason(cascade_runs):
+    d1, res1, _d2, _res2 = cascade_runs
+    forced = {e["tenant"] for e in downgrade_sequence(
+        os.path.join(d1, "fleet.jsonl")) if e["action"] == "force_commit"}
+    for tid in forced:
+        events = read_trace(os.path.join(d1, f"{tid}.jsonl"))
+        done = [e for e in events if e.kind == "done"]
+        assert done and done[-1].payload["reason"] == "fleet_ceiling"
+        # a forced tenant still COMMITS (Pyrrhus-style: keep what you
+        # have) — its result exists and is priced
+        assert res1[tid].decision in ("hybrid", "human_all")
+
+
+def test_fleet_report_structure(cascade_runs):
+    from repro.launch.orchestrator import fleet_report, render_fleet
+    d1, _res1, _d2, _res2 = cascade_runs
+    rep = fleet_report(d1)
+    assert set(rep["tenants"]) == {"t0", "t1", "t2"}
+    fl = rep["fleet"]
+    assert fl["ceiling"] == 14.0 and fl["rounds"] >= 1
+    assert fl["downgrades"] and fl["final"] is not None
+    assert fl["final"]["total"] == pytest.approx(
+        sum(t["total"] for t in fl["final"]["tenants"].values()))
+    text = render_fleet(rep)
+    assert "ceiling" in text and "t0" in text and "force_commit" in text
+
+
+# ---------------------------------------------------------------------------
+# controller units: hand-set ledgers, no campaigns
+# ---------------------------------------------------------------------------
+
+
+class FakeTenant:
+    """The controller-facing duck-type of :class:`repro.core.tenant.
+    Tenant` with the ledger hand-set — mirrors the real downgrade
+    semantics (pause zeroes the ask for one round, shrink halves it
+    once, force ends the tenant)."""
+
+    def __init__(self, tenant_id, priority=0, allocation=None,
+                 spent=0.0, ask=0.0, shrinkable=False):
+        self.tenant_id = tenant_id
+        self.priority = priority
+        self.allocation = allocation
+        self.paused = False
+        self.votes_shrunk = False
+        self.forced = False
+        self._spent = float(spent)
+        self._ask = float(ask)
+        self._shrinkable = shrinkable
+
+    @property
+    def spent(self):
+        return self._spent
+
+    @property
+    def done(self):
+        return self.forced
+
+    @property
+    def running(self):
+        return not self.forced
+
+    def next_spend(self):
+        if self.forced or self.paused:
+            return 0.0
+        return self._ask * (0.5 if self.votes_shrunk else 1.0)
+
+    def apply_downgrade(self, action):
+        if not self.running:
+            return False
+        if action == "pause":
+            if self.paused:
+                return False
+            self.paused = True
+            return True
+        if action == "shrink_votes":
+            if self.votes_shrunk or not self._shrinkable:
+                return False
+            self.votes_shrunk = True
+            return True
+        if action == "force_commit":
+            self.forced = True
+            return True
+        raise ValueError(action)
+
+
+def test_redistribute_surplus_to_highest_priority_first():
+    lo = FakeTenant("lo", priority=0, allocation=10.0, spent=2.0, ask=0.0)
+    mid = FakeTenant("mid", priority=1, allocation=5.0, spent=5.0, ask=10.0)
+    hi = FakeTenant("hi", priority=2, allocation=5.0, spent=5.0, ask=3.0)
+    ctl = FleetController([lo, mid, hi], global_budget=None)
+    ctl.rebalance()
+    # lo's 8.0 surplus: hi (most critical over-asker) topped up to its
+    # full 3.0 need first, mid gets the remaining 5.0 of its 10.0 need
+    assert lo.allocation == pytest.approx(2.0)
+    assert hi.allocation == pytest.approx(8.0)
+    assert mid.allocation == pytest.approx(10.0)
+    # nobody was downgraded — there is no ceiling
+    assert not any(t.paused or t.votes_shrunk or t.forced
+                   for t in (lo, mid, hi))
+
+
+def test_redistribute_takes_done_tenants_leftover():
+    done = FakeTenant("done", priority=9, allocation=10.0, spent=4.0)
+    done.forced = True          # finished: its leftover 6.0 is surplus
+    ask = FakeTenant("ask", priority=0, allocation=1.0, spent=1.0, ask=4.0)
+    ctl = FleetController([done, ask], global_budget=None)
+    ctl.rebalance()
+    assert done.allocation == pytest.approx(4.0)
+    assert ask.allocation == pytest.approx(5.0)
+
+
+def test_uncapped_tenants_sit_out_redistribution():
+    free = FakeTenant("free", allocation=None, spent=0.0, ask=100.0)
+    rich = FakeTenant("rich", allocation=10.0, spent=0.0, ask=0.0)
+    ctl = FleetController([free, rich], global_budget=None)
+    ctl.rebalance()
+    assert free.allocation is None and rich.allocation == pytest.approx(0.0)
+
+
+def test_cascade_pauses_least_critical_first_and_stops():
+    a = FakeTenant("a", priority=2, spent=4.0, ask=2.0)
+    b = FakeTenant("b", priority=0, spent=4.0, ask=2.0)
+    c = FakeTenant("c", priority=1, spent=4.0, ask=2.0)
+    # projected 18 vs ceiling 16: pausing ONE lowest-priority tenant fits
+    ctl = FleetController([a, b, c], global_budget=16.0)
+    summary = ctl.rebalance()
+    assert b.paused and not a.paused and not c.paused
+    assert [d["tenant"] for d in summary["downgrades"]] == ["b"]
+    assert ctl.projected() <= 16.0
+
+
+def test_cascade_tie_breaks_on_tenant_id():
+    a = FakeTenant("a", priority=0, spent=4.0, ask=2.0)
+    b = FakeTenant("b", priority=0, spent=4.0, ask=2.0)
+    ctl = FleetController([b, a], global_budget=10.0)
+    summary = ctl.rebalance()
+    assert a.paused and not b.paused
+    assert [d["tenant"] for d in summary["downgrades"]] == ["a"]
+
+
+def test_cascade_escalates_through_all_three_actions(tmp_path):
+    from repro.trace import TraceStore
+    trace = TraceStore(str(tmp_path / "fleet.jsonl"), "fleet")
+    a = FakeTenant("a", priority=1, spent=6.0, ask=2.0, shrinkable=True)
+    b = FakeTenant("b", priority=0, spent=6.0, ask=2.0, shrinkable=True)
+    # ceiling below the SPENT total: no amount of pausing or shrinking
+    # can fit — the cascade must escalate to force_commit for everyone
+    ctl = FleetController([a, b], global_budget=10.0, trace=trace)
+    summary = ctl.rebalance()
+    actions = [(d["action"], d["tenant"]) for d in summary["downgrades"]]
+    assert actions == [("pause", "b"), ("pause", "a"),
+                       ("shrink_votes", "b"), ("shrink_votes", "a"),
+                       ("force_commit", "b"), ("force_commit", "a")]
+    assert not a.running and not b.running
+    trace.close()
+    # the trace round-trips the exact sequence
+    assert [(d["action"], d["tenant"]) for d in
+            downgrade_sequence(str(tmp_path / "fleet.jsonl"))] == actions
+
+
+def test_pause_lifts_at_next_rebalance():
+    a = FakeTenant("a", priority=1, spent=4.0, ask=2.0)
+    b = FakeTenant("b", priority=0, spent=4.0, ask=2.0)
+    ctl = FleetController([a, b], global_budget=10.0)
+    ctl.rebalance()
+    assert b.paused
+    ctl.global_budget = 100.0   # ceiling no longer binds
+    ctl.rebalance()
+    assert not b.paused and not a.paused
+
+
+def test_resolve_stall_forces_everyone_least_critical_first(tmp_path):
+    from repro.trace import TraceStore
+    trace = TraceStore(str(tmp_path / "fleet.jsonl"), "fleet")
+    a = FakeTenant("a", priority=1, spent=1.0)
+    b = FakeTenant("b", priority=0, spent=1.0)
+    ctl = FleetController([a, b], global_budget=1.0, trace=trace)
+    ctl.resolve_stall()
+    assert not a.running and not b.running
+    trace.close()
+    assert [d["tenant"] for d in
+            downgrade_sequence(str(tmp_path / "fleet.jsonl"))] == ["b", "a"]
+
+
+def test_tenant_spec_from_dict():
+    s = TenantSpec.from_dict({"tenant_id": "t7", "priority": 3,
+                              "budget": 12.5, "seed": 4,
+                              "cfg": {"eps_target": 0.1, "max_iters": 5}})
+    assert s.tenant_id == "t7" and s.priority == 3
+    assert s.budget == pytest.approx(12.5) and s.seed == 4
+    assert s.cfg.eps_target == pytest.approx(0.1) and s.cfg.max_iters == 5
+    d = TenantSpec.from_dict({"tenant_id": "bare"})
+    assert d.priority == 0 and d.budget is None and d.cfg == MCALConfig()
+    with pytest.raises(TypeError):    # unknown cfg keys are rejected
+        TenantSpec.from_dict({"tenant_id": "x", "cfg": {"nope": 1}})
+    with pytest.raises(AssertionError):   # duplicate ids are rejected
+        FleetController([FakeTenant(i) for i in ("a", "a")])
+
+
+# ---------------------------------------------------------------------------
+# satellite: session ledger isolation through ONE shared service
+# ---------------------------------------------------------------------------
+
+ISO_CLASSES = 4
+ISO_POOL = 64
+
+
+def _iso_service():
+    from repro.annotation import make_annotation_service
+    return make_annotation_service(ISO_CLASSES, n_workers=7, noise=0.35,
+                                   repeats=3, seed=0)
+
+
+def _iso_requests(seed, n_batches=6):
+    rng = np.random.default_rng(seed)
+    return [np.sort(rng.choice(ISO_POOL, size=int(rng.integers(3, 9)),
+                               replace=False)).astype(np.int64)
+            for _ in range(n_batches)]
+
+
+_ISO_GT = np.random.default_rng(99).integers(
+    0, ISO_CLASSES, ISO_POOL).astype(np.int64)
+
+
+def _solo_labels(reqs):
+    """The same request history against a PRIVATE service (same pool
+    seed): the bit-exact baseline any shared-service session must
+    match."""
+    svc = _iso_service()
+    sess = svc.session("solo")
+    labels = [sess.annotate(i, _ISO_GT[i]) for i in reqs]
+    svc.close()
+    return labels, sess.votes_bought, sess.labels_bought
+
+
+def test_interleaved_sessions_do_not_cross_talk():
+    reqs_a, reqs_b = _iso_requests(1), _iso_requests(2)
+    svc = _iso_service()
+    a, b = svc.session("a"), svc.session("b")
+    got_a, got_b = [], []
+    # interleave through the BROKER (one worker thread serializes every
+    # batch) — a's and b's requests alternate in service-arrival order
+    for ra, rb in zip(reqs_a, reqs_b):
+        fa = a.submit(ra, _ISO_GT[ra])
+        fb = b.submit(rb, _ISO_GT[rb])
+        got_a.append(fa.result())
+        got_b.append(fb.result())
+    svc.close()
+
+    solo_a, votes_a, labels_a = _solo_labels(reqs_a)
+    solo_b, votes_b, labels_b = _solo_labels(reqs_b)
+    for got, want in zip(got_a, solo_a):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(got_b, solo_b):
+        np.testing.assert_array_equal(got, want)
+    # per-session charges are each session's own requests, and they
+    # partition the shared service ledger exactly
+    assert a.votes_bought == votes_a and b.votes_bought == votes_b
+    assert a.labels_bought == labels_a and b.labels_bought == labels_b
+    assert a.votes_bought + b.votes_bought == svc.votes_bought
+
+
+def test_session_preempt_resume_does_not_perturb_sibling():
+    reqs_a, reqs_b = _iso_requests(3), _iso_requests(4)
+    svc = _iso_service()
+    a, b = svc.session("a"), svc.session("b")
+    got_a, got_b = [], []
+    for i, (ra, rb) in enumerate(zip(reqs_a, reqs_b)):
+        if i == len(reqs_a) // 2:
+            # preempt tenant A mid-fleet: persist its session, drop it,
+            # resume into a FRESH session on the same live service
+            state = a.state_dict()
+            a = svc.session("a-resumed")
+            a.load_state_dict(state)
+        got_a.append(a.annotate(ra, _ISO_GT[ra]))
+        got_b.append(b.annotate(rb, _ISO_GT[rb]))
+    svc.close()
+
+    solo_a, votes_a, _ = _solo_labels(reqs_a)
+    solo_b, votes_b, _ = _solo_labels(reqs_b)
+    for got, want in zip(got_a, solo_a):   # A resumed bit-identically
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(got_b, solo_b):   # ...and B never noticed
+        np.testing.assert_array_equal(got, want)
+    assert a.votes_bought == votes_a and b.votes_bought == votes_b
+
+
+def test_shrunk_session_policy_is_tenant_local():
+    from repro.annotation.service import RepeatPolicy
+    svc = _iso_service()
+    a, b = svc.session("a"), svc.session("b")
+    a.set_policy(RepeatPolicy(repeats=1, aggregator="majority"))
+    idx = np.arange(8)
+    a.annotate(idx, _ISO_GT[idx])
+    b.annotate(idx, _ISO_GT[idx])
+    svc.close()
+    assert a.votes_bought == 8          # shrunk: 1 vote/label
+    assert b.votes_bought == 24         # sibling untouched: 3 votes/label
+    assert b.policy.repeats == 3

@@ -1,0 +1,187 @@
+"""Broker-thread lifecycle: every engine worker is a daemon, joins on
+close, and refuses work afterwards.
+
+Regression suite for the leak where ``PoolSweepRunner.submit``,
+``FitEngine.submit_fit``/``submit_call``, and ``AnnotationService.submit``
+each spun up a worker thread that was neither daemonized nor ever joined
+— a process that touched any async path could only exit by having its
+non-daemon workers die with it (or not exit at all under a runner that
+joins threads).  All three now share :class:`repro.core.worker.
+SerialWorker` and expose idempotent ``close()``/context-manager
+teardown, called from campaign teardown.
+"""
+import numpy as np
+import pytest
+
+from repro.core.worker import SerialWorker, WorkerClosed
+
+
+# ---------------------------------------------------------------------------
+# SerialWorker semantics
+# ---------------------------------------------------------------------------
+
+
+def test_worker_runs_jobs_in_order():
+    out = []
+    with SerialWorker("t") as w:
+        futs = [w.submit(out.append, i) for i in range(8)]
+        for f in futs:
+            f.result(timeout=5)
+    assert out == list(range(8))
+
+
+def test_worker_thread_is_daemon():
+    w = SerialWorker("t")
+    w.submit(lambda: None).result(timeout=5)
+    assert w._thread is not None and w._thread.daemon
+    w.close()
+
+
+def test_worker_close_joins_thread():
+    w = SerialWorker("t")
+    w.submit(lambda: None).result(timeout=5)
+    th = w._thread
+    assert th.is_alive()
+    w.close()
+    assert not th.is_alive() and not w.alive
+
+
+def test_worker_close_idempotent_and_lazy():
+    w = SerialWorker("t")
+    w.close()           # never started: still fine
+    w.close()
+    w2 = SerialWorker("t2")
+    w2.submit(lambda: 1).result(timeout=5)
+    w2.close()
+    w2.close()
+
+
+def test_worker_submit_after_close_raises():
+    w = SerialWorker("t")
+    w.submit(lambda: 1).result(timeout=5)
+    w.close()
+    with pytest.raises(WorkerClosed):
+        w.submit(lambda: 2)
+
+
+def test_worker_propagates_exceptions():
+    with SerialWorker("t") as w:
+        f = w.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            f.result(timeout=5)
+        # the worker survives a failing job
+        assert w.submit(lambda: 7).result(timeout=5) == 7
+
+
+def test_worker_close_drains_queued_jobs():
+    done = []
+    w = SerialWorker("t")
+    futs = [w.submit(done.append, i) for i in range(32)]
+    w.close()           # close waits for everything already queued
+    for f in futs:
+        f.result(timeout=5)
+    assert done == list(range(32))
+
+
+# ---------------------------------------------------------------------------
+# the three brokered engines
+# ---------------------------------------------------------------------------
+
+
+def _live_task(n=96, annotation=None):
+    from repro.core.task import LiveTask
+    from repro.data.synth import make_classification
+    x, y = make_classification(n, num_classes=3, difficulty=0.3, seed=0)
+    return LiveTask(features=x, groundtruth=y, num_classes=3, epochs=2,
+                    score_microbatch=32, sweep_page=32, seed=0,
+                    annotation=annotation)
+
+
+def test_sweep_runner_close_joins_and_refuses():
+    task = _live_task()
+    task.train(np.arange(32), task.groundtruth[:32])
+    fut = task.submit_candidates("margin", 4, np.arange(32, 96))
+    assert len(fut.result()) == 4
+    runner = task._sweep
+    assert runner._exec is not None and runner._exec.alive
+    runner.close()
+    assert not runner._exec.alive
+    with pytest.raises(WorkerClosed):
+        task.submit_candidates("margin", 4, np.arange(32, 96))
+    # synchronous sweeps remain valid after close
+    assert len(task.topk_candidates("margin", 4, np.arange(32, 96))) == 4
+    task.close()
+
+
+def test_fit_engine_close_joins_and_refuses():
+    task = _live_task()
+    c = task.submit_train(np.arange(32), task.groundtruth[:32]).result()
+    assert c > 0
+    eng = task._fit
+    assert eng._exec is not None and eng._exec.alive
+    eng.close()
+    assert not eng._exec.alive
+    with pytest.raises(WorkerClosed):
+        task.submit_train(np.arange(32), task.groundtruth[:32])
+    # synchronous training remains valid after close
+    assert task.train(np.arange(32), task.groundtruth[:32]) > 0
+    task.close()
+
+
+def test_annotation_service_close_joins_and_refuses():
+    from repro.annotation import make_annotation_service
+    svc = make_annotation_service(3, n_workers=5, noise=0.2, repeats=3,
+                                  seed=0)
+    idx = np.arange(16)
+    gt = np.zeros(16, np.int64)
+    labels = svc.submit(idx, gt).result()
+    assert labels.shape == (16,)
+    assert svc._exec is not None and svc._exec.alive
+    svc.close()
+    assert not svc._exec.alive
+    with pytest.raises(WorkerClosed):
+        svc.submit(idx, gt)
+    # the synchronous request path survives close
+    assert svc.annotate(idx, gt).shape == (16,)
+    svc.close()         # idempotent
+
+
+def test_campaign_close_tears_down_all_brokers():
+    """End-to-end regression: a campaign that exercised every async path
+    leaves ZERO broker threads after ``close()`` — and close is
+    idempotent."""
+    from repro.annotation import make_annotation_service
+    from repro.core import AMAZON, MCALCampaign, MCALConfig
+    svc = make_annotation_service(3, n_workers=5, noise=0.1, repeats=3,
+                                  seed=0)
+    task = _live_task(annotation=svc)
+    cfg = MCALConfig(max_iters=2, delta0_frac=0.1, test_frac=0.2,
+                     sweep_async=True, fit_async=True,
+                     label_quality=svc.expected_quality())
+    camp = MCALCampaign(task, AMAZON, cfg)
+    camp.run()
+    # the async campaign exercised both engine brokers (the annotation
+    # broker only starts on submit(), which the campaign never uses)
+    workers = [w for w in (task._sweep._exec, task._fit._exec)
+               if w is not None]
+    assert workers and all(w.alive for w in workers), \
+        "campaign never exercised a broker thread"
+    camp.close()
+    assert not any(w.alive for w in workers)
+    if svc._exec is not None:          # task.close() closed the service
+        assert not svc._exec.alive
+    camp.close()        # idempotent
+
+
+def test_run_campaign_closes_workers(tmp_path):
+    """The launcher's ``run_campaign`` joins every broker in its
+    teardown path."""
+    from repro.core import AMAZON, MCALConfig
+    from repro.launch.label import run_campaign
+    task = _live_task()
+    cfg = MCALConfig(max_iters=2, delta0_frac=0.1, test_frac=0.2,
+                     sweep_async=True, fit_async=True)
+    res, camp = run_campaign(task, AMAZON, cfg)
+    assert res is not None
+    for eng in (task._sweep, task._fit):
+        assert eng._exec is None or not eng._exec.alive
