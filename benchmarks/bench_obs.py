@@ -1,0 +1,141 @@
+"""Observability-layer benchmark: metrics overhead + replay cleanliness.
+
+Two gated claims about the runtime metrics layer (``repro.obs``):
+
+* instrumentation is effectively free on the live path — a fully
+  instrumented noisy adaptive-repeats campaign (every span, counter,
+  compile-cache probe, and queue gauge active, metric events interleaved
+  into the campaign trace) must run within 3% of the identical
+  metrics-off campaign (best-of-N wall clock on both legs, both traced,
+  so the gate isolates the METRICS cost from the trace cost
+  ``bench_trace`` already gates);
+* metrics never contaminate the decision record — ``trace.diff`` between
+  the metrics-on and metrics-off sibling traces must be clean (metric
+  events are observability kinds; the replay stream is byte-identical).
+
+The smoke leg drops the instrumented trace, a Prometheus textfile
+snapshot, and leaves the registry installed as the process default so
+``benchmarks.run`` embeds its snapshot into ``BENCH_*.json``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, artifact_path, timed_best
+
+OVERHEAD_GATE = 0.03            # instrumented/plain - 1, enforced in smoke
+POOL = 20000
+TRACE_OFF = "OBS_metrics_off.jsonl"
+TRACE_ON = "OBS_metrics_on.jsonl"
+PROM_NAME = "metrics_smoke.prom"
+
+
+def _campaign(trace_path, metrics=None):
+    """One noisy adaptive-repeats emulated campaign, traced; optionally
+    fully instrumented.  Fresh task + annotation service per call (both
+    are stateful)."""
+    from repro.annotation import make_annotation_service
+    from repro.core import AMAZON, MCALConfig, make_emulated_task
+    from repro.core.mcal import MCALCampaign
+    from repro.trace import TraceStore
+
+    ann = make_annotation_service(
+        10, noise=0.2, repeats=3, max_repeats=5, adaptive=True,
+        aggregator="ds", pricing=AMAZON, seed=0)
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=POOL)
+    task.annotation = ann
+    # the fine delta schedule runs ~17 iterations (vs 3 at the default):
+    # a second-scale workload, so the 3% gate measures instrumentation
+    # cost rather than scheduler jitter on a ~250ms campaign
+    cfg = MCALConfig(seed=0, delta0_frac=0.02,
+                     label_quality=ann.expected_quality())
+    camp = MCALCampaign(task, AMAZON, cfg)
+    with TraceStore(trace_path, "obs-noisy-s0") as tr:
+        camp.attach_trace(tr)
+        if metrics is not None:
+            metrics.attach_trace(tr)   # interleave metric events
+            camp.attach_metrics(metrics)
+        res = camp.run()
+        if metrics is not None:
+            metrics.emit_snapshot(scope="bench")
+        return res
+
+
+def run_smoke(enforce: bool = True, repeat: int = 4):
+    import time
+
+    from repro.obs import MetricsRegistry, cache_hit_rates, set_registry
+    from repro.trace import diff
+
+    off_path = artifact_path(TRACE_OFF)
+    on_path = artifact_path(TRACE_ON)
+
+    # Run the legs as back-to-back PAIRS (off then on) and gate on the
+    # best per-pair ratio: each pair shares the same machine state, so a
+    # single quiet pair reveals the true instrumented/plain ratio, and
+    # host drift that hits one pair inflates that pair's ratio without
+    # polluting the others.  (Separate min-over-leg minima need BOTH
+    # minima to land on quiet moments — on a sub-second campaign the
+    # scheduler jitter between those moments is itself > the 3% gate.)
+    _campaign(off_path)   # warmup: jit compiles land outside the timing
+    best = float("inf")
+    off_us = on_us = 0.0
+    res_off = res_on = None
+    last = {}
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        res_off = _campaign(off_path)
+        off = time.perf_counter() - t0
+        m = MetricsRegistry()   # fresh per repeat: identical work each run
+        last["m"] = m
+        t0 = time.perf_counter()
+        res_on = _campaign(on_path, m)
+        on = time.perf_counter() - t0
+        if on / off < best:
+            best = on / off
+            off_us, on_us = off * 1e6, on * 1e6
+    assert res_on.total_cost == res_off.total_cost, \
+        "attaching metrics changed the campaign's decisions"
+    overhead = best - 1.0
+
+    d = diff(off_path, on_path)
+    clean = d is None
+
+    m = last["m"]
+    m.write_prometheus(artifact_path(PROM_NAME))
+    set_registry(m)   # benchmarks.run embeds get_registry().snapshot()
+    snap = m.snapshot()
+    n_spans = sum(h["count"] for h in snap["histograms"]
+                  if h["name"] == "span_seconds")
+    cache = cache_hit_rates(snap)
+    rate = {eng: round(c["rate"], 3) for eng, c in sorted(cache.items())}
+
+    if enforce:
+        assert clean, (
+            f"metrics contaminated the replay stream: {d.describe()}")
+        assert overhead <= OVERHEAD_GATE, (
+            f"metrics overhead {overhead:.1%} exceeds the "
+            f"{OVERHEAD_GATE:.0%} gate "
+            f"({on_us:.0f}us instrumented vs {off_us:.0f}us metrics-off)")
+
+    return [
+        Row("obs_overhead", on_us,
+            f"overhead={overhead:+.1%};gate<={OVERHEAD_GATE:.0%};"
+            f"metrics_off_us={off_us:.0f};diff_clean={clean}",
+            meta={"overhead": overhead, "pool": POOL,
+                  "diff_clean": bool(clean),
+                  "artifact": artifact_path(PROM_NAME)}),
+        Row("obs_telemetry", on_us,
+            f"spans={n_spans};cache_hit_rates={rate}",
+            meta={"spans": int(n_spans), "cache_hit_rates": rate}),
+    ]
+
+
+def run():
+    """Full-suite leg: same measurement, gates reported but not
+    enforced (the smoke leg is the enforcing one)."""
+    return run_smoke(enforce=False)
+
+
+if __name__ == "__main__":
+    for r in run_smoke():
+        print(r.csv())

@@ -9,15 +9,16 @@ Two gated claims about the campaign event bus:
 * the trace IS the campaign — replaying it must reproduce the exact
   total cost, iteration count, and decision with zero engine recompute.
 
-The smoke leg leaves its trace at ``TRACE_smoke.jsonl`` so CI uploads it
-as a workflow artifact next to ``BENCH_*.json``.
+The smoke leg leaves its trace at ``artifacts/TRACE_smoke.jsonl`` (see
+``common.artifact_dir``) so CI uploads it as a workflow artifact next to
+``BENCH_*.json`` without littering the repo root.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, timed, timed_best
+from benchmarks.common import Row, artifact_path, timed, timed_best
 
 OVERHEAD_GATE = 0.05            # traced/untraced - 1, enforced in smoke
-TRACE_PATH = "TRACE_smoke.jsonl"
+TRACE_NAME = "TRACE_smoke.jsonl"
 POOL = 20000
 
 
@@ -47,14 +48,15 @@ def _campaign(trace_path=None):
 def run_smoke(enforce: bool = True, repeat: int = 3):
     from repro.trace import read_trace, replay
 
+    trace_path = artifact_path(TRACE_NAME)
     res_plain, plain_us = timed_best(_campaign, repeat=repeat)
-    res_traced, traced_us = timed_best(_campaign, TRACE_PATH,
+    res_traced, traced_us = timed_best(_campaign, trace_path,
                                        repeat=repeat)
     assert res_traced.total_cost == res_plain.total_cost, \
         "attaching a trace changed the campaign's decisions"
     overhead = traced_us / plain_us - 1.0
 
-    rp, replay_us = timed(replay, TRACE_PATH)
+    rp, replay_us = timed(replay, trace_path)
     match = (rp.total_cost == res_traced.total_cost
              and len(rp.history) == len(res_traced.history)
              and rp.decision == res_traced.decision
@@ -69,13 +71,13 @@ def run_smoke(enforce: bool = True, repeat: int = 3):
             f"{OVERHEAD_GATE:.0%} gate "
             f"({traced_us:.0f}us traced vs {plain_us:.0f}us untraced)")
 
-    n_events = len(read_trace(TRACE_PATH))
+    n_events = len(read_trace(trace_path))
     return [
         Row("trace_overhead", traced_us,
             f"overhead={overhead:+.1%};gate<={OVERHEAD_GATE:.0%};"
             f"untraced_us={plain_us:.0f};events={n_events}",
             meta={"overhead": overhead, "pool": POOL,
-                  "events": n_events, "artifact": TRACE_PATH}),
+                  "events": n_events, "artifact": trace_path}),
         Row("trace_replay", replay_us,
             f"cost=${rp.total_cost:.0f};iters={len(rp.history)};"
             f"votes={rp.votes};replay_match={match}",

@@ -48,6 +48,21 @@ class Row:
         return out
 
 
+def artifact_dir() -> str:
+    """Where benchmark runs drop their non-CSV byproducts (smoke traces,
+    metrics snapshots, profiles) — ``$BENCH_ARTIFACT_DIR`` or
+    ``artifacts/`` in the CWD, created on first use.  Keeping them in one
+    gitignored directory means CI uploads a single path and nothing
+    strays into the repo root."""
+    d = os.environ.get("BENCH_ARTIFACT_DIR", "artifacts")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def artifact_path(name: str) -> str:
+    return os.path.join(artifact_dir(), name)
+
+
 def timed(fn: Callable, *args, repeat: int = 1, **kw):
     t0 = time.perf_counter()
     out = None

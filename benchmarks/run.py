@@ -16,10 +16,14 @@
   bench_fit                fused retrain engine (>= 2x gate, exact params)
   bench_annotation         device Dawid-Skene EM (>= 2x gate, exact argmax)
   bench_trace              campaign event bus (<= 5% overhead gate +
-                           replay-equals-live; smoke leaves
-                           TRACE_smoke.jsonl as a CI artifact)
+                           replay-equals-live; smoke leaves its trace
+                           under artifacts/ as a CI artifact)
   bench_orchestrator       multi-tenant fleet (0-new-compiles-after-
                            tenant-1 gate + <= 0.75x fresh-serial wall)
+  bench_obs                runtime metrics layer (<= 3% overhead gate +
+                           metrics-on/off trace diff clean; smoke drops
+                           a Prometheus snapshot under artifacts/ and
+                           its registry snapshot lands in BENCH_*.json)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
@@ -63,6 +67,7 @@ MODULES = (
     "bench_annotation",
     "bench_trace",
     "bench_orchestrator",
+    "bench_obs",
 )
 
 
@@ -82,6 +87,15 @@ def write_bench_json(path: str, run_id: str, mode: str, rows, errors) -> None:
                   if "speedup" in r.record()},
         "errors": errors,
     }
+    # the run's telemetry rides along: whatever registry bench_obs (or
+    # any other module) installed as the process default
+    try:
+        from repro.obs import get_registry
+        snap = get_registry().snapshot()
+        if any(snap.values()):
+            blob["metrics"] = snap
+    except Exception:
+        pass
     with open(path, "w") as f:
         json.dump(blob, f, indent=2)
     print(f"# wrote {path}", file=sys.stderr)
@@ -91,7 +105,7 @@ def run_smoke():
     """The CI smoke leg: small-shape fit-engine + sweep-runtime + engine
     benchmarks with their speedup gates ENFORCED (a gate miss fails the
     job).  Returns (status, rows, errors)."""
-    from benchmarks import (bench_annotation, bench_fit,
+    from benchmarks import (bench_annotation, bench_fit, bench_obs,
                             bench_orchestrator, bench_selection,
                             bench_sweep, bench_trace)
 
@@ -107,6 +121,7 @@ def run_smoke():
         ("bench_annotation[smoke]", bench_annotation.run_smoke),
         ("bench_trace[smoke]", bench_trace.run_smoke),
         ("bench_orchestrator[smoke]", bench_orchestrator.run_smoke),
+        ("bench_obs[smoke]", bench_obs.run_smoke),
     ):
         try:
             for row in fn():

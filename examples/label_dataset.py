@@ -26,6 +26,14 @@ run.jsonl --watch 2``, replay it without recompute via ``python -m
 repro.launch.label --trace-replay run.jsonl``, or diff it against a
 sibling run with ``--trace-diff``.  The full launcher
 (``repro.launch.label``) takes the same ``--trace PATH`` flag.
+
+``--metrics`` additionally instruments every engine hot path with the
+runtime metrics layer (``repro.obs``): spans, compile-cache counters,
+queue gauges.  With ``--trace`` the metric events interleave into the
+trace (replay/diff ignore them) and the panel renders with
+``python -m repro.launch.report run.jsonl --metrics``; either way a
+per-span breakdown prints at the end.  The full launcher spells it
+``--metrics PATH`` (plus ``--prom`` / ``--profile``).
 """
 import sys
 
@@ -35,6 +43,7 @@ from repro.core import AMAZON, LiveTask, MCALConfig, run_mcal
 from repro.data.synth import make_classification
 
 NOISY = "--noisy" in sys.argv
+METRICS = "--metrics" in sys.argv
 TRACE = (sys.argv[sys.argv.index("--trace") + 1]
          if "--trace" in sys.argv else "")
 POOL, CLASSES, DIM = 6_000, 10, 32
@@ -66,14 +75,24 @@ task = LiveTask(features=x, groundtruth=y, num_classes=CLASSES,
 print("running MCAL (real training per iteration) ...")
 cfg = MCALConfig(eps_target=eps_target, delta0_frac=0.02, max_iters=25,
                  seed=0, label_quality=q if annotation else None)
+metrics = None
+if METRICS:
+    from repro.obs import MetricsRegistry
+    metrics = MetricsRegistry()
 if TRACE:
     from repro.trace import TraceStore
     with TraceStore(TRACE, "example-live-s0") as tr:
-        result = run_mcal(task, AMAZON, cfg, trace=tr)
+        if metrics is not None:
+            metrics.attach_trace(tr)
+        result = run_mcal(task, AMAZON, cfg, trace=tr, metrics=metrics)
+        if metrics is not None:
+            metrics.emit_snapshot(scope="example")
     print(f"trace          : {TRACE} (replay: python -m "
-          f"repro.launch.label --trace-replay {TRACE})")
+          f"repro.launch.label --trace-replay {TRACE}"
+          + (f"; panel: python -m repro.launch.report {TRACE} --metrics)"
+             if metrics is not None else ")"))
 else:
-    result = run_mcal(task, AMAZON, cfg)
+    result = run_mcal(task, AMAZON, cfg, metrics=metrics)
 
 human_all = POOL * AMAZON.price_per_label
 bound = eps_target
@@ -97,4 +116,12 @@ if NOISY:
           f"(avg {annotation.avg_repeats():.2f}/label); "
           f"worker accuracy "
           f"{np.round(annotation.worker_accuracy(), 2).tolist()}")
+if metrics is not None:
+    snap = metrics.snapshot()
+    spans = sorted((h for h in snap["histograms"]
+                    if h["name"] == "span_seconds"),
+                   key=lambda h: -h["sum"])
+    parts = [f"{h['labels'].get('name', '?')} x{h['count']} "
+             f"({h['sum']:.1f}s)" for h in spans[:5]]
+    print("metrics        : " + ", ".join(parts))
 assert result.measured_error <= bound + 0.01, "error bound violated!"

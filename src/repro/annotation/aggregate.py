@@ -248,6 +248,8 @@ class VoteAggregator:
         self.num_classes = num_classes
         self.cfg = cfg
         self.pack_keys: set = set()
+        # runtime metrics (repro.obs.MetricsRegistry); None = free no-op
+        self.metrics = None
 
     # -- packing -----------------------------------------------------------
     def _pad(self, votes) -> Tuple[jax.Array, int]:
@@ -255,6 +257,10 @@ class VoteAggregator:
         assert votes.ndim == 2, "votes must be (items, workers)"
         n = votes.shape[0]
         n_mb, mb = pack_shape(n, self.cfg.microbatch)
+        if self.metrics is not None:
+            self.metrics.inc(
+                "pack_cache_hits_total" if (n_mb, mb) in self.pack_keys
+                else "pack_cache_misses_total", engine="votes")
         self.pack_keys.add((n_mb, mb))
         pad = n_mb * mb - n
         if pad:

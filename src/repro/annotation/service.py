@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -118,6 +119,7 @@ class AnnotationService:
         self.aggregator = VoteAggregator(pool.cfg.num_classes, agg_cfg)
         self.ledger = CostLedger()             # the service budget ledger
         self.trace = None                      # campaign event bus (attach_trace)
+        self.metrics = None                    # runtime metrics (attach_metrics)
         # -- persisted runtime state (state_dict) --------------------------
         self._cursor = 0                       # request-batch counter: the
         #                                        worker-schedule offset
@@ -147,6 +149,14 @@ class AnnotationService:
         self.trace = trace
         self.ledger.trace = trace
         self.ledger.trace_name = "service"
+
+    def attach_metrics(self, metrics) -> None:
+        """Wire the runtime metrics registry (repro.obs) through the
+        request path: per-batch spans, EM/top-up round counters, and the
+        broker queue depth/wait telemetry.  None (the default) keeps
+        every instrumented site a free no-op."""
+        self.metrics = metrics
+        self.aggregator.metrics = metrics
 
     def _emit(self, kind: str, **payload) -> None:
         if self.trace is not None:
@@ -281,6 +291,29 @@ class AnnotationService:
     def _annotate_locked(self, idx: np.ndarray, true: np.ndarray,
                          cursor: int, pol: RepeatPolicy
                          ) -> Tuple[np.ndarray, int, int]:
+        if self.metrics is None:
+            return self._annotate_impl(idx, true, cursor, pol)
+        with self.metrics.span("annotate"):
+            return self._annotate_impl(idx, true, cursor, pol)
+
+    def _aggregate(self, resident, pol: RepeatPolicy):
+        """One device aggregation round (majority or Dawid-Skene EM),
+        timed when metrics are attached."""
+        if self.metrics is None:
+            return self.aggregator.aggregate_resident(resident,
+                                                      pol.aggregator)
+        t0 = time.perf_counter()
+        out = self.aggregator.aggregate_resident(resident, pol.aggregator)
+        self.metrics.observe("annotation_agg_seconds",
+                             time.perf_counter() - t0,
+                             aggregator=pol.aggregator)
+        self.metrics.inc("annotation_agg_rounds_total",
+                         aggregator=pol.aggregator)
+        return out
+
+    def _annotate_impl(self, idx: np.ndarray, true: np.ndarray,
+                       cursor: int, pol: RepeatPolicy
+                       ) -> Tuple[np.ndarray, int, int]:
         """One request batch under the lock: ``(labels, votes_spent,
         next_cursor)``.  The cursor is threaded through (not read off
         ``self``) so per-tenant :class:`AnnotationSession` cursors make
@@ -314,8 +347,11 @@ class AnnotationService:
         # (the FitEngine.extend_resident convention) — re-aggregation
         # never re-materializes or re-uploads the (N, W) matrix
         resident = self.aggregator.upload(votes)
-        labels, conf, ds = self.aggregator.aggregate_resident(
-            resident, pol.aggregator)
+        if self.metrics is not None:
+            self.metrics.inc("annotation_labels_total", float(N))
+            self.metrics.inc("annotation_votes_total",
+                             float(N * pol.repeats))
+        labels, conf, ds = self._aggregate(resident, pol)
         if pol.adaptive:
             rows = np.arange(N)
             for r in range(pol.repeats, pol.cap):
@@ -327,11 +363,14 @@ class AnnotationService:
                 spent += len(active)
                 self._emit("topup", round=int(r), n=int(len(active)),
                            cursor=int(base))
+                if self.metrics is not None:
+                    self.metrics.inc("annotation_topup_rounds_total")
+                    self.metrics.inc("annotation_votes_total",
+                                     float(len(active)))
                 self._topup_round(votes, active, idx, true, base, r)
                 resident = self.aggregator.scatter(resident, active,
                                                    votes[active])
-                labels, conf, ds = self.aggregator.aggregate_resident(
-                    resident, pol.aggregator)
+                labels, conf, ds = self._aggregate(resident, pol)
         # -- fold batch statistics into the service state ------------------
         # single-vote batches carry no quality signal (one vote always
         # "agrees" with its own aggregate and majority confidence is
@@ -372,8 +411,23 @@ class AnnotationService:
         ``result()`` — the aggregated labels."""
         idx = np.asarray(idx, np.int64).copy()
         true = np.asarray(true_labels, np.int64).copy()
-        return AnnotationFuture(
-            self._executor().submit(self.annotate, idx, true))
+        m = self.metrics
+        if m is None:
+            return AnnotationFuture(
+                self._executor().submit(self.annotate, idx, true))
+        m.add_gauge("queue_depth", 1, queue="annotation")
+        t_sub = time.perf_counter()
+
+        def job():
+            # wait = broker latency: submit -> the worker picks it up
+            m.observe("queue_wait_seconds", time.perf_counter() - t_sub,
+                      queue="annotation")
+            try:
+                return self.annotate(idx, true)
+            finally:
+                m.add_gauge("queue_depth", -1, queue="annotation")
+
+        return AnnotationFuture(self._executor().submit(job))
 
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
@@ -561,6 +615,12 @@ class AnnotationSession:
         interleave every tenant's requests and belong to the fleet
         trace, not to any one tenant's decision stream."""
         self.trace = trace
+
+    def attach_metrics(self, metrics) -> None:
+        """Runtime metrics are shared-service telemetry: delegate to the
+        service registry (per-tenant attribution happens via the
+        registry's bound labels on the calling thread, not here)."""
+        self.service.attach_metrics(metrics)
 
     def close(self) -> None:
         """Sessions do not own the broker thread — closing one is a

@@ -29,6 +29,7 @@ to the budget-constrained variant (min error s.t. cost <= budget).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import zlib
 from typing import Dict, List, Optional, Tuple
@@ -279,6 +280,8 @@ class MCALCampaign:
         self._iter = 0
         # campaign event bus (attach_trace): None = tracing off
         self.trace = None
+        # runtime metrics registry (attach_metrics): None = metrics off
+        self.metrics = None
 
     def attach_trace(self, trace) -> None:
         """Wire the campaign event bus through every engine family: this
@@ -296,12 +299,38 @@ class MCALCampaign:
         if hasattr(self.task, "attach_trace"):
             self.task.attach_trace(trace)
 
+    def attach_metrics(self, metrics) -> None:
+        """Wire a runtime metrics registry (``repro.obs``) through the
+        campaign: loop-phase spans (bootstrap/iteration/commit) here,
+        engine hot-path telemetry via the task's ``attach_metrics``, and
+        the annotation broker's queue/EM counters.  Orthogonal to
+        :meth:`attach_trace` — metric events are OBSERVABILITY_KINDS, so
+        an instrumented campaign's decision stream diffs clean against
+        an uninstrumented sibling's."""
+        self.metrics = metrics
+        ann = getattr(self.task, "annotation", None)
+        if ann is not None and hasattr(ann, "attach_metrics"):
+            ann.attach_metrics(metrics)
+        if hasattr(self.task, "attach_metrics"):
+            self.task.attach_metrics(metrics)
+
+    def _mspan(self, name: str):
+        """A named campaign-phase span, or a no-op context when metrics
+        are off (the ``trace is None`` convention, span-shaped)."""
+        if self.metrics is None:
+            return contextlib.nullcontext()
+        return self.metrics.span(name)
+
     def _emit(self, kind: str, **payload) -> None:
         if self.trace is not None:
             self.trace.emit(kind, **_trace_sanitize(payload))
 
     # -- bootstrap ----------------------------------------------------------
     def bootstrap(self, *, adopt: bool = False):
+        with self._mspan("bootstrap"):
+            return self._bootstrap_impl(adopt=adopt)
+
+    def _bootstrap_impl(self, *, adopt: bool = False):
         X = self.task.pool_size
         p = self.pool
         if self.trace is not None:
@@ -465,6 +494,17 @@ class MCALCampaign:
     # -- one loop body --------------------------------------------------------
     def iteration(self, *, acquire: bool = True,
                   forced_acquisition: Optional[np.ndarray] = None):
+        with self._mspan("iteration"):
+            rec = self._iteration_impl(acquire=acquire,
+                                       forced_acquisition=forced_acquisition)
+        if self.metrics is not None:
+            self.metrics.inc("campaign_iterations_total")
+            self.metrics.set_gauge("campaign_spent_total",
+                                   float(self.pool.ledger.total))
+        return rec
+
+    def _iteration_impl(self, *, acquire: bool = True,
+                        forced_acquisition: Optional[np.ndarray] = None):
         assert not self.done
         self._sync_fit()   # fold last iteration's async retrain first:
         p = self.pool      # everything below reads its params/measurement
@@ -698,6 +738,10 @@ class MCALCampaign:
 
     # -- commit ----------------------------------------------------------------
     def commit(self) -> MCALResult:
+        with self._mspan("commit"):
+            return self._commit_impl()
+
+    def _commit_impl(self) -> MCALResult:
         self._sync_fit()
         p = self.pool
         X = self.task.pool_size
@@ -965,10 +1009,13 @@ class MCALCampaign:
 
 def run_mcal(task, service: LabelingService,
              cfg: MCALConfig = MCALConfig(),
-             trace: Optional[object] = None) -> MCALResult:
+             trace: Optional[object] = None,
+             metrics: Optional[object] = None) -> MCALResult:
     camp = MCALCampaign(task, service, cfg)
     if trace is not None:
         camp.attach_trace(trace)
+    if metrics is not None:
+        camp.attach_metrics(metrics)
     return camp.run()
 
 

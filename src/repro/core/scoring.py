@@ -189,6 +189,19 @@ class PoolScoringEngine:
         # (lower().compile() does not populate jit's dispatch cache)
         self.pack_keys: set = set()
         self._compiled: dict = {}
+        # runtime metrics (repro.obs.MetricsRegistry); None = free no-op
+        self.metrics = None
+
+    def _note_pack(self, key: Tuple[int, int]) -> None:
+        """Record a pack-bucket touch: compile-cache hit when the bucket
+        was already swept, miss when this is its first (compiling) use."""
+        if self.metrics is not None:
+            if key in self.pack_keys:
+                self.metrics.inc("pack_cache_hits_total", engine="scoring")
+            else:
+                self.metrics.inc("pack_cache_misses_total",
+                                 engine="scoring")
+        self.pack_keys.add(key)
 
     # -- model plumbing ----------------------------------------------------
 
@@ -237,7 +250,7 @@ class PoolScoringEngine:
             # donation would otherwise invalidate the caller's own buffer
             # (asarray/reshape alias device arrays when no padding copies)
             x = jnp.copy(x)
-        self.pack_keys.add((n_mb, mb))
+        self._note_pack((n_mb, mb))
         return x.reshape((n_mb, mb) + x.shape[1:]), n
 
     # -- public API --------------------------------------------------------
@@ -250,7 +263,7 @@ class PoolScoringEngine:
         caller masks by its own valid count).  Shares the compile cache
         with :meth:`score`, and donates the page buffer where the backend
         supports donation."""
-        self.pack_keys.add((int(xs.shape[0]), int(xs.shape[1])))
+        self._note_pack((int(xs.shape[0]), int(xs.shape[1])))
         return self._run_packed(params, xs)
 
     def cache_keys(self):
@@ -282,6 +295,8 @@ class PoolScoringEngine:
             self._compiled[key] = self._score_all.lower(params, xs).compile()
             self.pack_keys.add(key)
             count += 1
+        if count and self.metrics is not None:
+            self.metrics.inc("warm_compiles_total", count, engine="scoring")
         return count
 
     def score(self, params, pool_x) -> Tuple[ScoreStats, jax.Array]:

@@ -153,14 +153,27 @@ def _anchor_min_dist(X, A, m, *, block: int, use_kernel: bool):
 
 
 def k_center_greedy_device(features, k: int, anchors=None,
-                           cfg: KCenterConfig = KCenterConfig()) -> np.ndarray:
+                           cfg: KCenterConfig = KCenterConfig(),
+                           metrics=None) -> np.ndarray:
     """Drop-in device twin of ``selection.k_center_greedy``.
 
     ``features``: (N, d) array (host numpy or device-resident — e.g. the
     scoring engine's feature emission, which never leaves the device);
     ``anchors``: (M, d) features of already-selected/labeled samples.
     Returns (k,) row indices into ``features`` as host int64.
+    ``metrics`` (a ``repro.obs.MetricsRegistry``) wraps the greedy loop
+    in a ``kcenter`` span; None keeps the call un-instrumented.
     """
+    if metrics is not None:
+        # the asarray fetch at the end already syncs, so the span covers
+        # the device loop's real time, not just dispatch
+        with metrics.span("kcenter"):
+            return _kcenter_host(features, k, anchors, cfg)
+    return _kcenter_host(features, k, anchors, cfg)
+
+
+def _kcenter_host(features, k: int, anchors,
+                  cfg: KCenterConfig) -> np.ndarray:
     X = jnp.asarray(features, jnp.float32)
     N, d = X.shape
     k = int(min(k, N))

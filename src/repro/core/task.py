@@ -111,6 +111,7 @@ class LiveTask:
             self._fit = b.fit
             self._params = None
             self._res_idx = np.zeros((0,), np.int64)
+            self.metrics = None
             return
         from repro.configs.base import ModelConfig, TrainConfig
         from repro.models.registry import get_model
@@ -143,6 +144,7 @@ class LiveTask:
                                         batch_size=self.batch_size),
                               mesh=self.mesh)
         self._res_idx = np.zeros((0,), np.int64)  # resident-pool row ledger
+        self.metrics = None  # runtime metrics registry (attach_metrics)
 
     def attach_trace(self, trace) -> None:
         """Wire the campaign event bus into this task's runtimes: the
@@ -156,6 +158,19 @@ class LiveTask:
             return
         self._sweep.trace = trace
         self._fit.trace = trace
+
+    def attach_metrics(self, metrics) -> None:
+        """Wire the runtime metrics registry (repro.obs) through this
+        task's engine stack: sweep page/fold timings, fit spans +
+        compile-cache hit/miss counters, and the k-center span.  Unlike
+        :meth:`attach_trace`, SHARED engines are wired too — the fleet
+        hands every tenant the same registry and attributes per-tenant
+        time via the orchestrator's bound ``tenant`` label, so there is
+        one metrics surface per process, not one per tenant."""
+        self.metrics = metrics
+        self._sweep.metrics = metrics
+        self._fit.metrics = metrics
+        self._engine.metrics = metrics
 
     def close(self) -> None:
         """Idempotent task teardown: join the OWNED engines' broker
@@ -295,7 +310,8 @@ class LiveTask:
         from repro.serving.sweep import FeatureSink
         feats = self._sweep.run(self._params, self._pool(candidates),
                                 FeatureSink())
-        rows = k_center_greedy_device(feats, k, anchors=anchors)
+        rows = k_center_greedy_device(feats, k, anchors=anchors,
+                                      metrics=self.metrics)
         picked = np.asarray(candidates, np.int64)[rows]
         return picked, np.asarray(feats[jnp.asarray(rows)], np.float32)
 

@@ -146,6 +146,23 @@ def build_parser() -> argparse.ArgumentParser:
                     metavar=("TRACE_A", "TRACE_B"),
                     help="first-divergence analysis between two sibling "
                          "campaign traces, then exit")
+    # -- runtime metrics & profiling (repro.obs) ----------------------------
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="record runtime telemetry (spans, counters, "
+                         "compile-cache hits) as metric events at PATH; "
+                         "pass the --trace path to interleave them into "
+                         "the campaign trace (replay/diff ignore them).  "
+                         "View with python -m repro.launch.report "
+                         "--metrics")
+    ap.add_argument("--prom", default="", metavar="PATH",
+                    help="write a Prometheus textfile snapshot of the "
+                         "metrics registry at campaign teardown")
+    ap.add_argument("--profile", default="", metavar="DIR",
+                    help="bracket one iteration (see --profile-iter) with "
+                         "jax.profiler.trace into DIR")
+    ap.add_argument("--profile-iter", type=int, default=1,
+                    help="which iteration --profile brackets (1-based, "
+                         "default: the first)")
     return ap
 
 
@@ -200,13 +217,24 @@ def _save_state(path: str, campaign=None, cursor=None, campaign_blob=None):
 
 def run_campaign(task, service, cfg, *, state_path: str = "",
                  sweep_ckpt_pages: int = 0, iters_per_run: int = 0,
-                 trace_path: str = "", campaign_id: str = "campaign"):
+                 trace_path: str = "", campaign_id: str = "campaign",
+                 metrics_path: str = "", prom_path: str = "",
+                 profile_dir: str = "", profile_iter: int = 1):
     """Drive one campaign with optional ``--state`` fault tolerance and
     an optional ``--trace`` event log.  Returns (MCALResult | None,
     campaign) — result is None when ``iters_per_run`` preempted the loop
     before completion.  A resumed campaign whose state checkpoint embeds
     a trace cursor APPENDS to its existing trace (no gaps, no duplicate
-    sequence numbers); otherwise the trace starts fresh."""
+    sequence numbers); otherwise the trace starts fresh.
+
+    ``metrics_path``/``prom_path``/``profile_dir`` wire the runtime
+    observability layer (``repro.obs``): any of them builds a
+    ``MetricsRegistry`` and attaches it to the campaign.  When
+    ``metrics_path`` names the same file as ``trace_path`` the metric
+    events interleave into the campaign trace (they are observability
+    kinds — replay and diff ignore them); a distinct path gets its own
+    store.  ``profile_dir`` brackets iteration ``profile_iter`` with
+    ``jax.profiler.trace``."""
     from repro.core import MCALCampaign
     from repro.serving.sweep import SweepCheckpoint
 
@@ -227,6 +255,21 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
         # attach BEFORE bootstrap/load so the trace opens with the
         # campaign's first event (campaign_begin or the resume marker)
         camp.attach_trace(trace)
+
+    metrics = None
+    metrics_store = None     # owned here iff metrics get their own file
+    if metrics_path or prom_path or profile_dir:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
+        if (metrics_path and trace is not None
+                and os.path.abspath(metrics_path)
+                == os.path.abspath(trace_path)):
+            metrics.attach_trace(trace)
+        elif metrics_path:
+            from repro.trace import TraceStore
+            metrics_store = TraceStore(metrics_path, campaign_id)
+            metrics.attach_trace(metrics_store)
+        camp.attach_metrics(metrics)
 
     try:
         if blob is not None:
@@ -253,7 +296,12 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
 
         ran = 0
         while not camp.done:
-            camp.iteration()
+            if profile_dir and ran + 1 == profile_iter:
+                from repro.obs import profile_block
+                with profile_block(profile_dir):
+                    camp.iteration()
+            else:
+                camp.iteration()
             ran += 1
             if state_path:
                 _save_state(state_path, camp)
@@ -266,9 +314,17 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
     finally:
         # teardown order matters: close the campaign first (joins the
         # sweep/fit/annotation broker threads, so nothing can emit), then
-        # the trace.  A partial run (iters_per_run) exits the process
-        # after this anyway — resume rebuilds the brokers lazily.
+        # the final metrics snapshot (it writes through the still-open
+        # stores), then the stores.  A partial run (iters_per_run) exits
+        # the process after this anyway — resume rebuilds the brokers
+        # lazily.
         camp.close()
+        if metrics is not None:
+            metrics.emit_snapshot(scope="campaign")
+            if prom_path:
+                metrics.write_prometheus(prom_path)
+        if metrics_store is not None:
+            metrics_store.close()
         if trace is not None:
             trace.close()
 
@@ -351,7 +407,11 @@ def main():
                              sweep_ckpt_pages=args.sweep_ckpt_pages,
                              iters_per_run=args.iters_per_run,
                              trace_path=args.trace,
-                             campaign_id=campaign_id)
+                             campaign_id=campaign_id,
+                             metrics_path=args.metrics,
+                             prom_path=args.prom,
+                             profile_dir=args.profile,
+                             profile_iter=args.profile_iter)
     if res is None:
         report = {"resumable": True, "state": args.state,
                   "iterations": len(camp.history),
@@ -378,6 +438,8 @@ def main():
     }
     if args.trace:
         report["trace"] = args.trace
+    if args.metrics:
+        report["metrics"] = args.metrics
     if annotation is not None:
         report["annotation"] = {
             "votes": annotation.votes_bought,

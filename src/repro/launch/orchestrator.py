@@ -142,17 +142,36 @@ class CampaignOrchestrator:
 
     def __init__(self, tenants: List, controller, *,
                  engines: Optional[SharedEngines] = None,
-                 concurrent: bool = True):
+                 concurrent: bool = True, metrics=None,
+                 metrics_trace=None):
         self.tenants = list(tenants)
         self.controller = controller
         self.engines = engines
         self.concurrent = concurrent
+        # runtime metrics registry (repro.obs); the fleet shares ONE —
+        # per-tenant attribution rides the bound `tenant` label each
+        # round pushes onto its worker thread
+        self.metrics = metrics
+        self._metrics_trace = metrics_trace   # owned metrics.jsonl store
 
     # -- barrier-parallel helper -------------------------------------------
-    def _run_round(self, jobs: List) -> None:
+    def _run_round(self, jobs: List, phase: str = "iteration") -> None:
         """Run ``(tenant, fn)`` jobs — threads + join in concurrent
         mode, in fleet order serially otherwise.  A worker exception is
-        re-raised on the caller after the barrier (never swallowed)."""
+        re-raised on the caller after the barrier (never swallowed).
+        With metrics attached, each job runs inside a tenant-labeled
+        ``round`` span (and a thread-local label bind, so every engine
+        metric the tenant records attributes to it)."""
+        m = self.metrics
+        if m is not None:
+            def timed(t, fn):
+                def run():
+                    with m.bind(tenant=t.tenant_id), \
+                            m.span("round", phase=phase,
+                                   tenant=t.tenant_id):
+                        fn()
+                return run
+            jobs = [(t, timed(t, fn)) for t, fn in jobs]
         if not self.concurrent or len(jobs) <= 1:
             for _t, fn in jobs:
                 fn()
@@ -184,9 +203,16 @@ class CampaignOrchestrator:
         """Bootstrap everyone, iterate in rebalanced rounds until every
         tenant is done, commit everyone.  Returns
         ``{tenant_id: MCALResult}``."""
-        self._run_round([(t, t.campaign.bootstrap) for t in self.tenants])
+        m = self.metrics
+        self._run_round([(t, t.campaign.bootstrap) for t in self.tenants],
+                        phase="bootstrap")
         while any(t.running for t in self.tenants):
-            self.controller.rebalance()
+            if m is not None:
+                with m.span("rebalance"):
+                    self.controller.rebalance()
+                m.inc("fleet_rounds_total")
+            else:
+                self.controller.rebalance()
             active = [t for t in self.tenants if t.running and not t.paused]
             if not active:
                 # every running tenant is paused: the ceiling cannot be
@@ -206,33 +232,52 @@ class CampaignOrchestrator:
                     results[t.tenant_id] = res
             return commit
 
-        self._run_round([(t, committer(t)) for t in self.tenants])
+        self._run_round([(t, committer(t)) for t in self.tenants],
+                        phase="commit")
         self.controller.finish()
+        if m is not None:
+            # compile-cache census + one final registry snapshot: the
+            # report's fleet --metrics panel reads these from the
+            # metrics stream alone
+            if self.engines is not None:
+                for eng, keys in self.engines.cache_keys().items():
+                    m.set_gauge("compiled_programs", len(keys),
+                                engine=eng)
+            m.emit_snapshot(scope="fleet")
         return results
 
     def close(self) -> None:
         """Tenant teardown (traces + owned task resources), then the
-        shared engine bundle."""
+        shared engine bundle (and the fleet's owned metrics stream)."""
         for t in self.tenants:
             t.close()
             if t.trace is not None:
                 t.trace.close()
         if self.engines is not None:
             self.engines.close()
+        if self._metrics_trace is not None:
+            self._metrics_trace.close()
 
 
 def build_fleet(features, groundtruth, specs, *, service,
                 global_budget: Optional[float] = None,
                 trace_dir: str = "", concurrent: bool = True,
                 annotation_service=None, engine_kw: Optional[Dict] = None,
-                task_kw: Optional[Dict] = None) -> CampaignOrchestrator:
+                task_kw: Optional[Dict] = None,
+                metrics=None) -> CampaignOrchestrator:
     """Wire a whole fleet: one :class:`SharedEngines` bundle, one
     :class:`~repro.core.task.LiveTask` + campaign +
     :class:`~repro.core.tenant.Tenant` per spec (per-tenant
     ``AnnotationSession`` when a shared annotation service is given),
     per-tenant traces under ``trace_dir`` (campaign id = tenant id) plus
     a fleet trace, and the :class:`~repro.core.tenant.FleetController`
-    over them all."""
+    over them all.
+
+    ``metrics`` is an optional ``repro.obs.MetricsRegistry`` shared by
+    the whole fleet (tenant attribution via the orchestrator's bound
+    labels).  With a ``trace_dir`` its events stream into
+    ``metrics.jsonl`` beside the tenant traces — observability kinds
+    only, so tenant decision streams still diff clean."""
     import numpy as np
 
     from repro.core.mcal import MCALCampaign
@@ -265,14 +310,23 @@ def build_fleet(features, groundtruth, specs, *, service,
                 os.path.join(trace_dir, f"{spec.tenant_id}.jsonl"),
                 spec.tenant_id)
             camp.attach_trace(trace)
+        if metrics is not None:
+            camp.attach_metrics(metrics)
         tenants.append(Tenant(spec, camp, trace))
     if trace_dir:
         from repro.trace import TraceStore
         fleet_trace = TraceStore(os.path.join(trace_dir, "fleet.jsonl"),
                                  "fleet")
+    metrics_trace = None
+    if metrics is not None and trace_dir and metrics.trace is None:
+        from repro.trace import TraceStore
+        metrics_trace = TraceStore(os.path.join(trace_dir, "metrics.jsonl"),
+                                   "fleet-metrics")
+        metrics.attach_trace(metrics_trace)
     controller = FleetController(tenants, global_budget, fleet_trace)
     return CampaignOrchestrator(tenants, controller, engines=engines,
-                                concurrent=concurrent)
+                                concurrent=concurrent, metrics=metrics,
+                                metrics_trace=metrics_trace)
 
 
 # -- fleet report ------------------------------------------------------------
@@ -286,7 +340,8 @@ def fleet_report(trace_dir: str) -> Dict:
 
     out: Dict = {"tenants": {}, "fleet": None}
     for name in sorted(os.listdir(trace_dir)):
-        if not name.endswith(".jsonl") or name == "fleet.jsonl":
+        if not name.endswith(".jsonl") or name in ("fleet.jsonl",
+                                                   "metrics.jsonl"):
             continue
         path = os.path.join(trace_dir, name)
         out["tenants"][name[:-len(".jsonl")]] = summarize(path)
@@ -351,6 +406,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--serial", action="store_true",
                     help="run the identical round schedule without "
                          "threads (the bit-identical baseline)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="runtime metrics: per-tenant round spans + "
+                         "engine telemetry stream into "
+                         "<trace-dir>/metrics.jsonl and a Prometheus "
+                         "snapshot lands at <trace-dir>/metrics.prom "
+                         "(render with launch.report --metrics)")
     ap.add_argument("--pool", type=int, default=2000)
     ap.add_argument("--classes", type=int, default=4)
     ap.add_argument("--difficulty", type=float, default=0.3)
@@ -393,14 +454,22 @@ def main():
             noise=args.annotator_noise, repeats=args.label_repeats,
             pricing=service, seed=args.seed)
 
+    metrics = None
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
     orch = build_fleet(x, y, specs, service=service,
                        global_budget=args.global_budget,
                        trace_dir=args.trace_dir,
                        concurrent=not args.serial,
-                       annotation_service=annotation)
+                       annotation_service=annotation,
+                       metrics=metrics)
     try:
         results = orch.run()
     finally:
+        if metrics is not None and args.trace_dir:
+            metrics.write_prometheus(
+                os.path.join(args.trace_dir, "metrics.prom"))
         orch.close()
     report = {
         "tenants": {tid: {"decision": r.decision, "cost": r.total_cost,

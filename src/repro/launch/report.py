@@ -10,17 +10,26 @@ a campaign without touching the process driving it:
     PYTHONPATH=src python -m repro.launch.report TRACE.jsonl --watch 5
     PYTHONPATH=src python -m repro.launch.report TRACE.jsonl --json
 
+The positional path may also be a fleet TRACE DIR (the orchestrator's
+``--trace-dir``): every tenant trace renders, plus the fleet's
+``metrics.jsonl`` when present.  ``--metrics`` adds the runtime panel
+(per-engine time breakdown, compile-cache hit rates, queue depths,
+burn rate vs throughput) from the ``metric_span``/``metric_snapshot``
+events — recorded telemetry only, nothing is recomputed.
+
 Everything here reads events only — no jax, no engines, no recompute
-(:func:`summarize` imports nothing heavier than the trace store).
+(:func:`summarize` imports nothing heavier than the trace store and
+the jax-free ``repro.obs`` rollups).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-from repro.trace.store import read_trace
+from repro.trace.store import TraceError, read_trace
 
 
 def summarize(path: str) -> Dict:
@@ -171,23 +180,175 @@ def render(s: Dict) -> str:
     return "\n".join(lines)
 
 
+def summarize_metrics(paths: List[str]) -> Dict:
+    """Fold the ``metric_span`` stream and the last ``metric_snapshot``
+    from one or more trace files into the ``--metrics`` panel's data.
+
+    Recorded telemetry only: span rows come from ``repro.obs.export``'s
+    jax-free rollups; the registry snapshot (counters/gauges/histograms)
+    is whatever the campaign last emitted — nothing is recomputed."""
+    from repro.obs.export import (cache_hit_rates, queue_stats,
+                                  snapshot_counter, span_rollup)
+    events = []
+    for p in paths:
+        events.extend(read_trace(p))
+    spans = span_rollup(events)
+    snapshot = None
+    for e in events:
+        if e.kind == "metric_snapshot":
+            snapshot = e.payload.get("snapshot")
+    rows = [{"name": name, "tenant": tenant, **stats}
+            for (name, tenant), stats in sorted(
+                spans.items(),
+                key=lambda kv: -kv[1]["seconds"])]
+    return {
+        "spans": rows,
+        "snapshot": snapshot,
+        "cache": cache_hit_rates(snapshot) if snapshot else {},
+        "queues": queue_stats(snapshot) if snapshot else {},
+        "rows_swept": (snapshot_counter(snapshot, "sweep_rows_total")
+                       if snapshot else 0.0),
+        "votes": (snapshot_counter(snapshot, "annotation_votes_total")
+                  if snapshot else 0.0),
+    }
+
+
+def render_metrics(ms: Dict, burn: Optional[Dict] = None) -> str:
+    """The terminal view of one :func:`summarize_metrics` pass."""
+    lines = ["", "== metrics =="]
+    rows = ms["spans"]
+    if rows:
+        total = sum(r["seconds"] for r in rows) or 1.0
+        tenants = any(r["tenant"] for r in rows)
+        head = f"{'span':<12}"
+        if tenants:
+            head += f" {'tenant':<10}"
+        head += (f" {'count':>6} {'total_s':>9} {'mean_ms':>9} "
+                 f"{'max_ms':>9} {'share':>6} {'err':>4}")
+        lines.append(head)
+        for r in rows:
+            line = f"{r['name']:<12}"
+            if tenants:
+                line += f" {r['tenant'] or '-':<10}"
+            mean = r["seconds"] / r["count"] if r["count"] else 0.0
+            line += (f" {r['count']:>6} {r['seconds']:>9.3f} "
+                     f"{mean * 1e3:>9.2f} {r['max'] * 1e3:>9.2f} "
+                     f"{100.0 * r['seconds'] / total:>5.1f}% "
+                     f"{r['errors']:>4}")
+            lines.append(line)
+    else:
+        lines.append("(no metric_span events)")
+    if ms["cache"]:
+        parts = []
+        for eng, c in sorted(ms["cache"].items()):
+            parts.append(f"{eng} {int(c['hits'])}/"
+                         f"{int(c['hits'] + c['misses'])} hits "
+                         f"({100.0 * c['rate']:.1f}%)")
+        lines.append("compile cache: " + "  ".join(parts))
+    if ms["queues"]:
+        parts = []
+        for q, st in sorted(ms["queues"].items()):
+            part = f"{q} depth={int(st.get('depth', 0))}"
+            if st.get("waits"):
+                part += (f" waits={int(st['waits'])}"
+                         f" mean={st['wait_mean'] * 1e3:.1f}ms"
+                         f" max={st['wait_max'] * 1e3:.1f}ms")
+            parts.append(part)
+        lines.append("queues: " + "  ".join(parts))
+    # burn rate vs throughput: $/s from the campaign ledger stream next
+    # to the device-side row/vote counters the registry accumulated
+    sweep_s = sum(r["seconds"] for r in rows if r["name"] == "sweep")
+    if ms["rows_swept"]:
+        thr = (f"{ms['rows_swept']:.0f} rows swept"
+               + (f" ({ms['rows_swept'] / sweep_s:,.0f} rows/s in sweeps)"
+                  if sweep_s > 0 else ""))
+        if ms["votes"]:
+            thr += f", {ms['votes']:.0f} votes"
+        rate = None
+        if burn:
+            rate = burn.get("recent_per_second") or burn.get("per_second")
+        if rate is not None:
+            thr += f"  @ ${rate:.3f}/s burn"
+        lines.append("throughput: " + thr)
+    return "\n".join(lines)
+
+
+def _trace_paths(path: str) -> Tuple[List[str], List[str]]:
+    """(campaign traces, metric-event sources) for a file or fleet dir.
+
+    A file is both its own campaign trace and its own metrics stream
+    (solo campaigns interleave metric events into the one trace).  A
+    fleet dir contributes every tenant trace plus the orchestrator's
+    standalone ``metrics.jsonl``; ``fleet.jsonl`` is control-plane only
+    and renders through neither view."""
+    if os.path.isdir(path):
+        names = sorted(os.listdir(path))
+        camps = [os.path.join(path, n) for n in names
+                 if n.endswith(".jsonl")
+                 and n not in ("fleet.jsonl", "metrics.jsonl")]
+        if not camps:
+            raise FileNotFoundError(
+                f"no campaign traces in {path!r} yet")
+        metrics = [os.path.join(path, n) for n in names
+                   if n == "metrics.jsonl"]
+        return camps, metrics + camps
+    return [path], [path]
+
+
 def main(argv: Optional[List[str]] = None):
     ap = argparse.ArgumentParser(
         description="live view of an MCAL campaign trace")
-    ap.add_argument("trace", help="trace JSONL path (may be mid-write)")
+    ap.add_argument("trace", help="trace JSONL path (may be mid-write) "
+                                  "or a fleet trace dir")
     ap.add_argument("--json", action="store_true",
                     help="print the summary as JSON instead of text")
     ap.add_argument("--watch", type=float, default=0.0, metavar="SECONDS",
                     help="re-render every N seconds until the campaign "
                          "commits (0 = render once)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="append the runtime metrics panel (per-engine "
+                         "time breakdown, cache hit rates, queue depths, "
+                         "burn vs throughput)")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="read metric events from PATH instead of the "
+                         "trace itself")
     args = ap.parse_args(argv)
     while True:
-        s = summarize(args.trace)
+        try:
+            camps, msources = _trace_paths(args.trace)
+            if args.metrics_file:
+                msources = [args.metrics_file]
+            summaries = [summarize(p) for p in camps]
+            ms = summarize_metrics(msources) if args.metrics else None
+        except (TraceError, OSError) as exc:
+            # a watched trace can vanish mid-poll (rotation, the writer
+            # re-creating its dir, a tenant not started yet) — in watch
+            # mode that is a transient, not an error: re-wait
+            if not args.watch:
+                raise
+            print(f"# waiting for {args.trace}: {exc}", flush=True)
+            time.sleep(args.watch)
+            continue
         if args.json:
-            print(json.dumps(s, indent=2))
+            blob: Dict = (summaries[0] if len(summaries) == 1
+                          else {"tenants": summaries})
+            if ms is not None:
+                blob = dict(blob)
+                blob["metrics"] = {k: v for k, v in ms.items()
+                                   if k != "snapshot"}
+                blob["metrics"]["snapshot"] = ms["snapshot"]
+            print(json.dumps(blob, indent=2))
         else:
-            print(render(s))
-        if not args.watch or s["commit"] is not None:
+            for i, s in enumerate(summaries):
+                if i:
+                    print()
+                print(render(s))
+            if ms is not None:
+                burn = (summaries[0]["burn"]
+                        if len(summaries) == 1 else None)
+                print(render_metrics(ms, burn))
+        done = all(s["commit"] is not None for s in summaries)
+        if not args.watch or done:
             return
         time.sleep(args.watch)
         print()

@@ -1,0 +1,49 @@
+# Opt-in deep-dive profiling: bracket one chosen campaign iteration
+# with jax.profiler.trace.  Everything here degrades to a no-op when
+# the profiler is unavailable — an opt-in dump must never kill a
+# campaign that already spent real annotation budget.
+"""``--profile DIR`` support: one iteration under ``jax.profiler``.
+
+The metrics registry answers "where did the time go" at span
+granularity; this answers "why" at op granularity, for exactly one
+iteration (profiles are huge — bracketing the whole campaign would
+drown the trace viewer and the disk).  Usage::
+
+    with profile_block("prof_dir", enabled=(it == args.profile_iter)):
+        camp.iteration()
+
+View with ``tensorboard --logdir prof_dir`` or perfetto.
+"""
+from __future__ import annotations
+
+import sys
+from contextlib import contextmanager
+
+__all__ = ["profile_block"]
+
+
+@contextmanager
+def profile_block(outdir: str, enabled: bool = True):
+    if not enabled or not outdir:
+        yield False
+        return
+    try:
+        import jax
+
+        ctx = jax.profiler.trace(outdir)
+        ctx.__enter__()
+    except Exception as e:  # profiler backend missing / refused to start
+        print(f"# profile: jax.profiler unavailable ({type(e).__name__}: "
+              f"{e}) — continuing without", file=sys.stderr)
+        yield False
+        return
+    try:
+        yield True
+    finally:
+        # a broken profiler teardown must not lose the iteration's work
+        # (and must never mask an exception from the profiled body)
+        try:
+            ctx.__exit__(None, None, None)
+        except Exception as e:
+            print(f"# profile: trace teardown failed "
+                  f"({type(e).__name__}: {e})", file=sys.stderr)

@@ -65,6 +65,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
+import time
 from types import SimpleNamespace
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -455,6 +456,8 @@ class PoolSweepRunner:
         # campaign event bus (observability only: page cursors + sink
         # finalizations; emits may come from the runner's worker thread)
         self.trace = None
+        # runtime metrics (repro.obs.MetricsRegistry); None = free no-op
+        self.metrics = None
 
     def _emit(self, kind: str, **payload) -> None:
         if self.trace is not None:
@@ -478,6 +481,20 @@ class PoolSweepRunner:
         happens only for the callback's cursor, never round-trips back),
         and no cursor is cut after the final page (there is nothing left
         to resume)."""
+        if self.metrics is not None:
+            with self.metrics.span("sweep", sink=sink.kind):
+                return self._run_sync(params, pool, sink,
+                                      checkpoint=checkpoint,
+                                      checkpoint_every=checkpoint_every,
+                                      on_checkpoint=on_checkpoint)
+        return self._run_sync(params, pool, sink, checkpoint=checkpoint,
+                              checkpoint_every=checkpoint_every,
+                              on_checkpoint=on_checkpoint)
+
+    def _run_sync(self, params, pool, sink, *,
+                  checkpoint: Optional[SweepCheckpoint] = None,
+                  checkpoint_every: int = 0,
+                  on_checkpoint: Optional[Callable] = None):
         n = self.adapter.length(pool)
         n_pages = self.n_pages(n)
         start, state = self._restore(sink, n, checkpoint)
@@ -576,19 +593,39 @@ class PoolSweepRunner:
     def _sweep(self, params, pool, sink, state, start: int, stop: int,
                n: int):
         P = self.cfg.page_rows
+        m = self.metrics
+        clock = time.perf_counter
         queue: List = []
         nxt = start
         depth = max(self.cfg.prefetch, 1)
+
+        def put_page(i: int):
+            # h2d submit latency (the transfer itself overlaps compute)
+            t0 = clock() if m is not None else 0.0
+            out = self.adapter.put(pool, i * P, min((i + 1) * P, n))
+            if m is not None:
+                m.observe("sweep_put_seconds", clock() - t0)
+            return out
+
         while nxt < stop and len(queue) < depth:
-            queue.append(self.adapter.put(pool, nxt * P,
-                                          min((nxt + 1) * P, n)))
+            queue.append(put_page(nxt))
             nxt += 1
         for p in range(start, stop):
             page, nvalid = queue.pop(0)
+            t0 = clock() if m is not None else 0.0
             stats, feats = self.adapter.score(params, page)  # async dispatch
+            if m is not None:
+                # dispatch-side latency only: device compute stays async
+                # and overlaps the next page's h2d below
+                m.observe("sweep_score_submit_seconds", clock() - t0)
             if nxt < stop:   # h2d of the next page overlaps this compute
-                queue.append(self.adapter.put(pool, nxt * P,
-                                              min((nxt + 1) * P, n)))
+                queue.append(put_page(nxt))
                 nxt += 1
+            t0 = clock() if m is not None else 0.0
             state = sink.fold(state, stats, feats, p * P, nvalid)
+            if m is not None:
+                # fold blocks on page i's results: the overlap window
+                m.observe("sweep_fold_seconds", clock() - t0)
+                m.inc("sweep_pages_total")
+                m.inc("sweep_rows_total", float(nvalid))
         return state

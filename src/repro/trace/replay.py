@@ -43,9 +43,12 @@ REPLAY_KINDS = frozenset({
 })
 
 # telemetry: counts/interleavings vary with runtime mode and preemption
+# (metric_span / metric_snapshot are the repro.obs metrics stream — they
+# interleave with the decision events but never enter replay or diff)
 OBSERVABILITY_KINDS = frozenset({
     "state_save", "resume", "vote_round", "topup", "annotator_snapshot",
     "sweep_cut", "sweep_done", "fit_submit", "fit_done",
+    "metric_span", "metric_snapshot",
 })
 
 ALL_KINDS = REPLAY_KINDS | OBSERVABILITY_KINDS

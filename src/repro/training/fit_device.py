@@ -149,6 +149,8 @@ class FitEngine:
         # for async retrains; the fold emit runs on the worker thread)
         self.trace = None
         self._submit_seq = 0
+        # runtime metrics (repro.obs.MetricsRegistry); None = free no-op
+        self.metrics = None
 
     # -- program construction ------------------------------------------------
 
@@ -161,6 +163,9 @@ class FitEngine:
         spe, bs, n_pad = fit_plan(n, self.cfg.batch_size)
         key = (spe, bs, n_pad)
         prog = self._programs.get(key)
+        if self.metrics is not None:
+            self.metrics.inc("pack_cache_hits_total" if prog is not None
+                             else "pack_cache_misses_total", engine="fit")
         if prog is not None:
             return prog, key
         epochs, step, batch_key = self.cfg.epochs, self._step, self._batch_key
@@ -223,6 +228,19 @@ class FitEngine:
         return self._run(rng, jnp.asarray(xp), jnp.asarray(yp), n)
 
     def _run(self, rng, xd, yd, n: int) -> Tuple[Dict, jax.Array]:
+        if self.metrics is not None:
+            # fence on losses: the span covers the device retrain, not
+            # just the async dispatch (runs on the fit worker for
+            # submit_fit, so campaign-side overlap is unaffected).
+            # labeled by the fit_plan bucket, not raw n — O(log N) series
+            n_pad = fit_plan(n, self.cfg.batch_size)[2]
+            with self.metrics.span("fit", n_pad=n_pad) as sp:
+                params, losses = self._run_impl(rng, xd, yd, n)
+                sp.fence(losses)
+            return params, losses
+        return self._run_impl(rng, xd, yd, n)
+
+    def _run_impl(self, rng, xd, yd, n: int) -> Tuple[Dict, jax.Array]:
         prog, key = self._program(n)
         prog = self._compiled.get(key, prog)   # warmed AOT executable
         init_key, shuffle_key = self._keys(rng)
@@ -347,6 +365,15 @@ class FitEngine:
         compiled executables are kept and dispatched directly by
         :meth:`fit` (``lower().compile()`` does not populate jit's own
         dispatch cache); returns how many programs were compiled."""
+        if self.metrics is None:
+            return self._warm_impl(keys)
+        with self.metrics.span("warm", engine="fit"):
+            count = self._warm_impl(keys)
+        if count:
+            self.metrics.inc("warm_compiles_total", count, engine="fit")
+        return count
+
+    def _warm_impl(self, keys) -> int:
         from repro.training.train_loop import abstract_train_state
         if self._batch_key != "features":
             raise NotImplementedError(
