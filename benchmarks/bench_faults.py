@@ -1,0 +1,116 @@
+"""Fault-injection benchmark: chaos transparency + injector overhead.
+
+Two gated claims about the resilience layer (``repro.faults``):
+
+* recovery is TRANSPARENT — a noisy adaptive-DS emulated campaign under
+  the standard transient FaultPlan (flaky annotation backend, torn
+  trace write) must COMPLETE, and its decisions, ledger, and trace must
+  be bit-identical to the fault-free sibling (``trace.replay.diff``
+  clean over the decision kinds);
+* the injection seams are effectively free — the identical campaign
+  with an EMPTY-plan injector attached at every seam (every request,
+  broker job, flush, and iteration ticks the injector; nothing ever
+  fires) must run within 5% of the uninstrumented campaign.
+
+The smoke leg leaves its chaos trace at ``artifacts/FAULTS_smoke.jsonl``
+next to the other bench artifacts.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, artifact_path, timed_best
+
+OVERHEAD_GATE = 0.05            # injected/plain - 1, enforced in smoke
+TRACE_NAME = "FAULTS_smoke.jsonl"
+POOL = 20000
+CHAOS_SEED = 0
+
+
+def _campaign(trace_path=None, faults=None, retry=None):
+    """One noisy adaptive-DS emulated campaign; returns MCALResult.
+    Fresh task + annotation service per call (both are stateful)."""
+    from repro.annotation import make_annotation_service
+    from repro.core import AMAZON, MCALConfig, make_emulated_task
+    from repro.core.mcal import MCALCampaign
+
+    ann = make_annotation_service(
+        10, noise=0.2, repeats=3, max_repeats=5, adaptive=True,
+        aggregator="ds", pricing=AMAZON, seed=0)
+    task = make_emulated_task("cifar10", "resnet18", seed=0,
+                              pool_size=POOL)
+    task.annotation = ann
+    cfg = MCALConfig(seed=0, label_quality=ann.expected_quality())
+    camp = MCALCampaign(task, AMAZON, cfg)
+    trace = None
+    if trace_path is not None:
+        from repro.trace import TraceStore
+        trace = TraceStore(trace_path, "smoke-chaos-s0")
+        camp.attach_trace(trace)
+    if faults is not None:
+        camp.attach_faults(faults, retry)
+    try:
+        return camp.run()
+    finally:
+        if trace is not None:
+            trace.close()
+
+
+def run_smoke(enforce: bool = True, repeat: int = 3):
+    from repro.faults import FaultInjector, FaultPlan, RetryPolicy
+    from repro.trace import diff
+
+    # -- transparency: chaos run == fault-free run, bit for bit --------
+    chaos_path = artifact_path(TRACE_NAME)
+    clean_path = artifact_path("FAULTS_smoke_clean.jsonl")
+    inj = FaultInjector(FaultPlan.standard_transient(CHAOS_SEED))
+    res_chaos = _campaign(chaos_path, inj,
+                          RetryPolicy(seed=CHAOS_SEED, sleep_scale=0.0))
+    res_clean = _campaign(clean_path)
+    d = diff(chaos_path, clean_path)
+    transparent = (d is None
+                   and res_chaos.ledger == res_clean.ledger
+                   and res_chaos.decision == res_clean.decision
+                   and res_chaos.total_cost == res_clean.total_cost)
+    if enforce:
+        assert inj.fired > 0, \
+            "the standard transient plan never fired — nothing was tested"
+        assert transparent, (
+            f"chaos run diverged from its fault-free sibling: "
+            f"diff={d}, ${res_chaos.total_cost} vs ${res_clean.total_cost}")
+
+    # -- overhead: empty-plan injector at every seam vs none -----------
+    res_plain, plain_us = timed_best(_campaign, repeat=repeat)
+    idle = FaultInjector(FaultPlan())           # every seam ticks; none fire
+    res_idle, idle_us = timed_best(
+        _campaign, None, idle, RetryPolicy(sleep_scale=0.0), repeat=repeat)
+    assert res_idle.total_cost == res_plain.total_cost, \
+        "an idle injector changed the campaign's decisions"
+    overhead = idle_us / plain_us - 1.0
+    if enforce:
+        assert overhead <= OVERHEAD_GATE, (
+            f"idle-injector overhead {overhead:.1%} exceeds the "
+            f"{OVERHEAD_GATE:.0%} gate "
+            f"({idle_us:.0f}us injected vs {plain_us:.0f}us plain)")
+
+    ticks = sum(idle.counters().values())
+    return [
+        Row("faults_chaos", 0.0,
+            f"fired={inj.fired};diff_clean={d is None};"
+            f"transparent={transparent};cost=${res_chaos.total_cost:.0f}",
+            meta={"fired": inj.fired, "transparent": bool(transparent),
+                  "pool": POOL, "artifact": chaos_path}),
+        Row("faults_idle_overhead", idle_us,
+            f"overhead={overhead:+.1%};gate<={OVERHEAD_GATE:.0%};"
+            f"plain_us={plain_us:.0f};seam_ticks={ticks}",
+            meta={"overhead": overhead, "seam_ticks": ticks}),
+    ]
+
+
+def run():
+    """Full-suite leg: same measurement, gates reported but not
+    enforced (the smoke leg is the enforcing one)."""
+    return run_smoke(enforce=False)
+
+
+if __name__ == "__main__":
+    for r in run_smoke():
+        print(r.csv())

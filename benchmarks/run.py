@@ -24,6 +24,10 @@
                            metrics-on/off trace diff clean; smoke drops
                            a Prometheus snapshot under artifacts/ and
                            its registry snapshot lands in BENCH_*.json)
+  bench_faults             fault-injection harness (chaos run diff-clean
+                           vs fault-free sibling + <= 5% idle-injector
+                           overhead gate; smoke leaves its chaos trace
+                           under artifacts/)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
@@ -68,6 +72,7 @@ MODULES = (
     "bench_trace",
     "bench_orchestrator",
     "bench_obs",
+    "bench_faults",
 )
 
 
@@ -105,9 +110,9 @@ def run_smoke():
     """The CI smoke leg: small-shape fit-engine + sweep-runtime + engine
     benchmarks with their speedup gates ENFORCED (a gate miss fails the
     job).  Returns (status, rows, errors)."""
-    from benchmarks import (bench_annotation, bench_fit, bench_obs,
-                            bench_orchestrator, bench_selection,
-                            bench_sweep, bench_trace)
+    from benchmarks import (bench_annotation, bench_faults, bench_fit,
+                            bench_obs, bench_orchestrator,
+                            bench_selection, bench_sweep, bench_trace)
 
     print("name,us_per_call,derived")
     status, rows, errors = 0, [], []
@@ -122,6 +127,7 @@ def run_smoke():
         ("bench_trace[smoke]", bench_trace.run_smoke),
         ("bench_orchestrator[smoke]", bench_orchestrator.run_smoke),
         ("bench_obs[smoke]", bench_obs.run_smoke),
+        ("bench_faults[smoke]", bench_faults.run_smoke),
     ):
         try:
             for row in fn():

@@ -34,6 +34,21 @@ trace (replay/diff ignore them) and the panel renders with
 ``python -m repro.launch.report run.jsonl --metrics``; either way a
 per-span breakdown prints at the end.  The full launcher spells it
 ``--metrics PATH`` (plus ``--prom`` / ``--profile``).
+
+``--chaos`` runs the campaign under seeded fault injection
+(``repro.faults``): a flaky annotation backend (transient failures +
+latency spikes), one broker-job crash per engine family, and one torn
+trace write — all recovered by the resilience layer (bounded seeded-
+jitter retries, in-place job re-dispatch, torn-tail truncation), so the
+result is bit-identical to the fault-free run.  Combine with
+``--noisy`` (the annotation-service request path is the busiest fault
+site) and ``--trace`` (the torn-write site, plus ``fault_injected`` /
+``retry`` events land in the trace for ``repro.launch.report``'s fault-
+pressure line).  The injected-fault and
+retry counts print at the end; the full launcher spells it ``--chaos``
+(+ ``--chaos-seed``), alongside ``--autosave PATH`` (crash-safe
+resume sidecar) and ``--sweep-timeout`` / ``--fit-timeout``
+(straggler wall budgets).
 """
 import sys
 
@@ -44,6 +59,7 @@ from repro.data.synth import make_classification
 
 NOISY = "--noisy" in sys.argv
 METRICS = "--metrics" in sys.argv
+CHAOS = "--chaos" in sys.argv
 TRACE = (sys.argv[sys.argv.index("--trace") + 1]
          if "--trace" in sys.argv else "")
 POOL, CLASSES, DIM = 6_000, 10, 32
@@ -79,12 +95,21 @@ metrics = None
 if METRICS:
     from repro.obs import MetricsRegistry
     metrics = MetricsRegistry()
+faults = retry = None
+if CHAOS:
+    from repro.faults import FaultInjector, FaultPlan, RetryPolicy
+    faults = FaultInjector(FaultPlan.standard_transient(0))
+    retry = RetryPolicy(seed=0)
+    print("chaos mode: standard transient fault plan injected "
+          "(flaky annotation backend, one crash per engine broker, "
+          "one torn trace write)")
 if TRACE:
     from repro.trace import TraceStore
     with TraceStore(TRACE, "example-live-s0") as tr:
         if metrics is not None:
             metrics.attach_trace(tr)
-        result = run_mcal(task, AMAZON, cfg, trace=tr, metrics=metrics)
+        result = run_mcal(task, AMAZON, cfg, trace=tr, metrics=metrics,
+                          faults=faults, retry=retry)
         if metrics is not None:
             metrics.emit_snapshot(scope="example")
     print(f"trace          : {TRACE} (replay: python -m "
@@ -92,7 +117,8 @@ if TRACE:
           + (f"; panel: python -m repro.launch.report {TRACE} --metrics)"
              if metrics is not None else ")"))
 else:
-    result = run_mcal(task, AMAZON, cfg, metrics=metrics)
+    result = run_mcal(task, AMAZON, cfg, metrics=metrics,
+                      faults=faults, retry=retry)
 
 human_all = POOL * AMAZON.price_per_label
 bound = eps_target
@@ -116,6 +142,10 @@ if NOISY:
           f"(avg {annotation.avg_repeats():.2f}/label); "
           f"worker accuracy "
           f"{np.round(annotation.worker_accuracy(), 2).tolist()}")
+if faults is not None:
+    print(f"chaos          : {faults.fired} faults injected across "
+          f"{sum(faults.counters().values()):,} seam ticks "
+          f"({', '.join(sorted(faults.counters()))}) — all recovered")
 if metrics is not None:
     snap = metrics.snapshot()
     spans = sorted((h for h in snap["histograms"]

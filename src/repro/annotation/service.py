@@ -120,6 +120,9 @@ class AnnotationService:
         self.ledger = CostLedger()             # the service budget ledger
         self.trace = None                      # campaign event bus (attach_trace)
         self.metrics = None                    # runtime metrics (attach_metrics)
+        self.faults = None                     # chaos injector (attach_faults)
+        self.retry = None                      # faults.RetryPolicy: re-issue
+        #                                        transiently-failed batches
         # -- persisted runtime state (state_dict) --------------------------
         self._cursor = 0                       # request-batch counter: the
         #                                        worker-schedule offset
@@ -157,6 +160,18 @@ class AnnotationService:
         every instrumented site a free no-op."""
         self.metrics = metrics
         self.aggregator.metrics = metrics
+
+    def attach_faults(self, faults, retry=None) -> None:
+        """Wire the chaos/resilience seam: every request batch ticks the
+        ``annotation.request`` fault site BEFORE any charge or cursor
+        advance, and with a :class:`~repro.faults.RetryPolicy` attached
+        transiently-failed batches are re-issued (safe: votes are
+        counter-free hashes of (pool seed, worker, item), so a re-issued
+        request yields the identical vote matrix, and a failed attempt
+        charges nothing — retries charge exactly once)."""
+        self.faults = faults
+        if retry is not None:
+            self.retry = retry
 
     def _emit(self, kind: str, **payload) -> None:
         if self.trace is not None:
@@ -281,16 +296,58 @@ class AnnotationService:
         """:meth:`annotate` plus the EXACT priced vote count this call
         consumed, measured inside the lock — the per-call accounting the
         votes-bought delta protocol approximates from outside it."""
-        with self._lock:
-            labels, votes, self._cursor = self._annotate_locked(
-                np.asarray(idx, np.int64),
-                np.asarray(true_labels, np.int64),
-                self._cursor, self.policy)
+        idx = np.asarray(idx, np.int64)
+        true = np.asarray(true_labels, np.int64)
+
+        def attempt():
+            # read-modify-write of the cursor stays atomic per attempt:
+            # a failed attempt (the fault fires pre-mutation) leaves
+            # cursor, ledger, and statistics untouched, so the retry
+            # replays the identical worker schedule and charges once
+            with self._lock:
+                out = self._annotate_locked(idx, true, self._cursor,
+                                            self.policy)
+                self._cursor = out[2]
+                return out
+
+        labels, votes, _ = self._run_request(attempt)
         return labels, votes
 
+    def _run_request(self, attempt, *, retry=None, trace=None):
+        """One request batch through the resilience layer: run
+        ``attempt`` under the retry policy (session override first,
+        service default second, none = a single bare attempt).  Each
+        re-issue emits a ``retry`` observability event and bumps
+        ``retries_total``; exhaustion raises
+        :class:`~repro.faults.RetryExhausted` (terminal — the fleet
+        layer quarantines)."""
+        retry = retry if retry is not None else self.retry
+        if retry is None:
+            return attempt()
+        emitter = trace if trace is not None else self.trace
+
+        def notify(attempt_no, exc, delay):
+            if emitter is not None:
+                emitter.emit("retry", site="annotation.request",
+                             attempt=int(attempt_no),
+                             error=type(exc).__name__, delay=float(delay))
+            if self.metrics is not None:
+                self.metrics.inc("retries_total", site="annotation.request")
+
+        return retry.call(attempt, site="annotation.request", notify=notify)
+
     def _annotate_locked(self, idx: np.ndarray, true: np.ndarray,
-                         cursor: int, pol: RepeatPolicy
+                         cursor: int, pol: RepeatPolicy,
+                         faults=None, timeout: Optional[float] = None
                          ) -> Tuple[np.ndarray, int, int]:
+        faults = faults if faults is not None else self.faults
+        if faults is not None:
+            # the injection seam sits BEFORE the metrics span and before
+            # any mutation: a fault here models the request never
+            # reaching the backend — nothing was charged or counted
+            if timeout is None and self.retry is not None:
+                timeout = self.retry.timeout
+            faults.check("annotation.request", timeout=timeout)
         if self.metrics is None:
             return self._annotate_impl(idx, true, cursor, pol)
         with self.metrics.span("annotate"):
@@ -519,6 +576,10 @@ class AnnotationSession:
         self._labels = 0
         self._policy: Optional[RepeatPolicy] = None
         self.trace = None
+        # per-tenant resilience overrides (None = the service's): a chaos
+        # harness can fail ONE tenant's requests while siblings run clean
+        self._faults = None
+        self._retry = None
 
     # -- shared-surface delegation -----------------------------------------
     @property
@@ -585,9 +646,20 @@ class AnnotationSession:
         concurrency-safe, the service is)."""
         idx = np.asarray(idx, np.int64)
         true = np.asarray(true_labels, np.int64)
-        with self.service._lock:
-            labels, votes, self._cursor = self.service._annotate_locked(
-                idx, true, self._cursor, self.policy)
+        svc = self.service
+        retry = self._retry if self._retry is not None else svc.retry
+        timeout = retry.timeout if retry is not None else None
+
+        def attempt():
+            with svc._lock:
+                out = svc._annotate_locked(idx, true, self._cursor,
+                                           self.policy, self._faults,
+                                           timeout)
+                self._cursor = out[2]
+                return out
+
+        labels, votes, _ = svc._run_request(attempt, retry=retry,
+                                            trace=self.trace)
         self._votes += votes
         self._labels += len(idx)
         if self.trace is not None:
@@ -621,6 +693,17 @@ class AnnotationSession:
         service registry (per-tenant attribution happens via the
         registry's bound labels on the calling thread, not here)."""
         self.service.attach_metrics(metrics)
+
+    def attach_faults(self, faults, retry=None) -> None:
+        """Per-SESSION chaos/retry override: only this tenant's request
+        batches tick the injector (and retry under ``retry``) — the seam
+        the quarantine acceptance test fails one tenant through while
+        its siblings stay fault-free.  The service-level
+        :meth:`AnnotationService.attach_faults` remains the
+        whole-endpoint chaos switch."""
+        self._faults = faults
+        if retry is not None:
+            self._retry = retry
 
     def close(self) -> None:
         """Sessions do not own the broker thread — closing one is a

@@ -41,6 +41,7 @@ from repro.core.cost import (CostLedger, LabelQuality, LabelingService,
                              TrainCostModel)
 from repro.core.powerlaw import PowerLaw, fit_power_law
 from repro.core.search import SearchResult, adapt_delta, budget_search, joint_search
+from repro.faults.errors import StragglerTimeout
 from repro.trace.store import sanitize as _trace_sanitize
 
 DEFAULT_THETAS = tuple(round(0.05 * i, 2) for i in range(1, 21))
@@ -277,11 +278,18 @@ class MCALCampaign:
         self.sweep_checkpoint_every = 0          # pages between cursor cuts
         self.on_sweep_checkpoint = None          # callback(SweepCheckpoint)
         self.resume_sweep_checkpoint = None      # cursor to resume from
+        # straggler wall budgets for the async folds (seconds; None =
+        # wait forever, the pre-resilience behavior).  Launcher-set
+        # plumbing like the cursors above (--sweep-timeout/--fit-timeout)
+        self.sweep_timeout = None
+        self.fit_timeout = None
         self._iter = 0
         # campaign event bus (attach_trace): None = tracing off
         self.trace = None
         # runtime metrics registry (attach_metrics): None = metrics off
         self.metrics = None
+        # chaos injector (attach_faults): None = injection off
+        self.faults = None
 
     def attach_trace(self, trace) -> None:
         """Wire the campaign event bus through every engine family: this
@@ -313,6 +321,29 @@ class MCALCampaign:
             ann.attach_metrics(metrics)
         if hasattr(self.task, "attach_metrics"):
             self.task.attach_metrics(metrics)
+
+    def attach_faults(self, faults, retry=None) -> None:
+        """Wire a :class:`repro.faults.FaultInjector` (and optional
+        :class:`~repro.faults.RetryPolicy`) through every fault site this
+        campaign owns: the annotation request path (per-service or
+        per-session), the task's sweep/fit broker workers, the trace
+        store's flush path, and this driver's own mid-iteration kill
+        point.  Call AFTER ``attach_trace``/``attach_metrics`` so fault/
+        retry events ride the same surfaces.  All injected telemetry is
+        OBSERVABILITY_KINDS — a chaos run whose retries succeed stays
+        diff-clean against its fault-free sibling."""
+        self.faults = faults
+        if self.trace is not None:
+            faults.attach_trace(self.trace)
+            if hasattr(self.trace, "attach_faults"):
+                self.trace.attach_faults(faults)
+        if self.metrics is not None:
+            faults.attach_metrics(self.metrics)
+        ann = getattr(self.task, "annotation", None)
+        if ann is not None and hasattr(ann, "attach_faults"):
+            ann.attach_faults(faults, retry)
+        if hasattr(self.task, "attach_faults"):
+            self.task.attach_faults(faults, retry)
 
     def _mspan(self, name: str):
         """A named campaign-phase span, or a no-op context when metrics
@@ -425,7 +456,12 @@ class MCALCampaign:
             return
         nB, fut = self._fit_pending
         self._fit_pending = None
-        _c, (stats_T, correct) = fut.result()
+        try:
+            _c, (stats_T, correct) = fut.result(self.fit_timeout)
+        except StragglerTimeout:
+            if self.metrics is not None:
+                self.metrics.inc("straggler_timeouts_total", engine="fit")
+            raise
         self._record_measurement(nB, stats_T, correct)
 
     def _fit_models(self) -> Tuple[Dict[float, PowerLaw], TrainCostModel]:
@@ -506,6 +542,12 @@ class MCALCampaign:
     def _iteration_impl(self, *, acquire: bool = True,
                         forced_acquisition: Optional[np.ndarray] = None):
         assert not self.done
+        if self.faults is not None:
+            # the kill point sits BEFORE any mutation of this iteration
+            # (and before the async-fit fold), so an InjectedKill here
+            # leaves the campaign exactly at the previous iteration's
+            # committed state — what the autosave sidecar persists
+            self.faults.check("campaign.iteration")
         self._sync_fit()   # fold last iteration's async retrain first:
         p = self.pool      # everything below reads its params/measurement
         X = self.task.pool_size
@@ -628,7 +670,13 @@ class MCALCampaign:
             pick = None
             if pending is not None:
                 if take <= pending[0]:
-                    out = pending[1].result()
+                    try:
+                        out = pending[1].result(self.sweep_timeout)
+                    except StragglerTimeout:
+                        if self.metrics is not None:
+                            self.metrics.inc("straggler_timeouts_total",
+                                             engine="sweep")
+                        raise
                     full = out[0] if isinstance(out, tuple) else out
                     pick = np.asarray(full[:take], np.int64)
                 else:   # adapted delta outgrew the submitted sweep
@@ -650,7 +698,8 @@ class MCALCampaign:
 
     def _finish(self, reason: str):
         """End the loop; the ``done`` event records WHY (budget | bailout
-        | converged | max_iters | pool_exhausted)."""
+        | converged | max_iters | pool_exhausted | fleet_ceiling |
+        quarantined)."""
         self.done = True
         self._emit("done", reason=reason)
 
@@ -1010,12 +1059,16 @@ class MCALCampaign:
 def run_mcal(task, service: LabelingService,
              cfg: MCALConfig = MCALConfig(),
              trace: Optional[object] = None,
-             metrics: Optional[object] = None) -> MCALResult:
+             metrics: Optional[object] = None,
+             faults: Optional[object] = None,
+             retry: Optional[object] = None) -> MCALResult:
     camp = MCALCampaign(task, service, cfg)
     if trace is not None:
         camp.attach_trace(trace)
     if metrics is not None:
         camp.attach_metrics(metrics)
+    if faults is not None:
+        camp.attach_faults(faults, retry)
     return camp.run()
 
 

@@ -172,6 +172,18 @@ class LiveTask:
         self._fit.metrics = metrics
         self._engine.metrics = metrics
 
+    def attach_faults(self, faults, retry=None) -> None:
+        """Wire the chaos injector (and optional re-dispatch retry
+        policy) into the OWNED engines' broker workers (fault sites
+        ``worker.pool-sweep``/``worker.fit-engine``).  Shared engines
+        are left unwired, same reasoning as :meth:`attach_trace`: their
+        jobs interleave every tenant's work, so injecting there would
+        chaos the whole fleet, not this tenant."""
+        if self.engines is not None:
+            return
+        self._sweep.attach_faults(faults, retry)
+        self._fit.attach_faults(faults, retry)
+
     def close(self) -> None:
         """Idempotent task teardown: join the OWNED engines' broker
         threads (shared engines belong to the fleet; the annotation

@@ -44,7 +44,7 @@ from repro.core.mcal import MCALCampaign, MCALConfig
 # fleet runs made identical budget decisions
 FLEET_KINDS = frozenset({
     "fleet_begin", "fleet_round", "redistribute", "downgrade",
-    "fleet_done",
+    "quarantine", "fleet_done",
 })
 
 # the cascade, in relief order (least to most destructive)
@@ -90,6 +90,8 @@ class Tenant:
         self.paused = False                 # one-round acquisition pause
         self.votes_shrunk = False           # shrink_votes applied
         self.forced = False                 # force_commit applied
+        self.quarantined = False            # isolated after a fault
+        self.quarantine_error = ""          # what ended it (for reports)
         self._shrink_ratio = 1.0            # projected label-price scale
 
     # -- identity ----------------------------------------------------------
@@ -328,6 +330,35 @@ class FleetController:
                            ceiling=(float(self.global_budget)
                                     if self.global_budget is not None
                                     else None))
+
+    def quarantine(self, tenant: Tenant, error: BaseException,
+                   phase: str = "iteration") -> bool:
+        """Isolate a tenant whose round died on a TERMINAL resilience
+        fault (retries exhausted, straggler wall budget blown) instead
+        of nuking the fleet: its campaign ends with ``done`` reason
+        ``quarantined`` (pending async work dropped), its remaining
+        allocation flows into the next ``rebalance``'s surplus walk
+        (a done tenant projects ``next_spend() == 0``, so the existing
+        redistribution picks the headroom up unchanged), and the
+        decision is emitted as a fleet-trace ``quarantine`` event.
+        Sibling tenants' decision streams stay diffable against their
+        solo runs — quarantine only ever REMOVES a spender.  Returns
+        True iff this call performed the isolation (idempotent)."""
+        if tenant.quarantined:
+            return False
+        tenant.quarantined = True
+        tenant.quarantine_error = f"{type(error).__name__}: {error}"
+        c = tenant.campaign
+        c._drop_pending()
+        if getattr(c, "_fit_pending", None) is not None:
+            c._fit_pending[1].cancel()
+            c._fit_pending = None
+        if not c.done:
+            c._finish("quarantined")
+        self._emit("quarantine", round=int(self.round),
+                   tenant=tenant.tenant_id, phase=phase,
+                   error=tenant.quarantine_error)
+        return True
 
     def finish(self) -> Dict:
         """Terminal fleet event: the final roll-up, flushed."""

@@ -17,15 +17,23 @@ workers atexit), and a fleet of campaigns leaked one thread per engine.
   done/cancel/result semantics are unchanged — cancelling a queued job
   still works through ``Future.set_running_or_notify_cancel``);
 * ``close()`` is the missing join: idempotent, drains the queue sentinel
-  and joins the thread, after which ``submit`` raises.  Every engine
-  exposes it (plus the context-manager sugar), and campaign teardown
-  calls it — the shutdown regression tests in
-  ``tests/test_shutdown.py`` pin both properties.
+  and joins the thread, after which ``submit`` raises.  It returns
+  whether the thread actually joined within ``timeout`` and warns on a
+  leaked (still-running) thread.  Every engine exposes it (plus the
+  context-manager sugar), and campaign teardown calls it — the shutdown
+  regression tests in ``tests/test_shutdown.py`` pin both properties;
+* a crashed job never poisons the queue: the loop delivers the
+  exception at ``result()`` and keeps draining, and with a
+  ``RetryPolicy``/``FaultInjector`` attached (``attach_faults``) a
+  transiently-crashed job is RE-DISPATCHED in place — the resilience
+  seam ``repro.faults`` exercises with injected
+  :class:`~repro.faults.errors.InjectedWorkerCrash` faults.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import warnings
 from concurrent.futures import Future
 from typing import Optional
 
@@ -42,12 +50,31 @@ class SerialWorker:
     attribute stuck jobs to their engine.
     """
 
-    def __init__(self, name: str = "serial-worker"):
+    def __init__(self, name: str = "serial-worker", *,
+                 retry=None, faults=None):
         self._name = name
         self._q: "queue.SimpleQueue" = queue.SimpleQueue()
         self._thread: Optional[threading.Thread] = None
         self._closed = False
         self._lock = threading.Lock()
+        self.retry = retry            # faults.RetryPolicy: re-dispatch
+        self.faults = faults          # faults.FaultInjector: chaos seam
+        self.metrics = None           # obs registry for retries_total
+        self.redispatches = 0         # transient job crashes survived
+
+    # -- resilience wiring ---------------------------------------------------
+    @property
+    def fault_site(self) -> str:
+        """This worker's fault-plan site key (``worker.<name>``)."""
+        return f"worker.{self._name}"
+
+    def attach_faults(self, faults, retry=None) -> None:
+        """Wire the chaos seam: every job ticks ``worker.<name>`` before
+        running (an injected crash raises into the job), and with a
+        retry policy transiently-crashed jobs are re-dispatched."""
+        self.faults = faults
+        if retry is not None:
+            self.retry = retry
 
     # -- the executor surface ----------------------------------------------
     def submit(self, fn, *args, **kw) -> Future:
@@ -64,6 +91,19 @@ class SerialWorker:
             self._q.put((fut, fn, args, kw))
         return fut
 
+    def _run_job(self, fn, args, kw):
+        """One dispatch of a job through the fault seam; re-dispatched
+        as a whole by the retry policy on a transient crash."""
+        if self.faults is not None:
+            self.faults.check(self.fault_site)
+        return fn(*args, **kw)
+
+    def _notify_retry(self, attempt: int, exc: BaseException,
+                      delay: float) -> None:
+        self.redispatches += 1
+        if self.metrics is not None:
+            self.metrics.inc("retries_total", site=self.fault_site)
+
     def _loop(self):
         while True:
             item = self._q.get()
@@ -73,7 +113,13 @@ class SerialWorker:
             if not fut.set_running_or_notify_cancel():
                 continue              # cancelled while queued
             try:
-                fut.set_result(fn(*args, **kw))
+                if self.retry is not None:
+                    result = self.retry.call(
+                        lambda: self._run_job(fn, args, kw),
+                        site=self.fault_site, notify=self._notify_retry)
+                else:
+                    result = self._run_job(fn, args, kw)
+                fut.set_result(result)
             except BaseException as e:   # delivered at result()
                 fut.set_exception(e)
 
@@ -83,19 +129,33 @@ class SerialWorker:
         """True while the worker thread exists and has not been joined."""
         return self._thread is not None and self._thread.is_alive()
 
-    def close(self, timeout: Optional[float] = None) -> None:
+    def close(self, timeout: Optional[float] = None) -> bool:
         """Idempotent shutdown: finish queued jobs, join the thread.
         Safe to call on a worker that never started (no thread, no-op
-        beyond flipping the closed flag)."""
+        beyond flipping the closed flag).
+
+        Returns True when the broker thread is gone (joined, never
+        started, or already closed with its thread finished); False —
+        with a warning — when it failed to join within ``timeout`` and
+        leaked (a stuck job; the daemon flag keeps it from hanging
+        interpreter exit)."""
         with self._lock:
-            if self._closed:
-                return
+            already = self._closed
             self._closed = True
             thread = self._thread
-            if thread is not None:
+            if thread is not None and not already:
                 self._q.put(None)
-        if thread is not None:
+        if thread is None:
+            return True
+        if not already:
             thread.join(timeout)
+        if thread.is_alive():
+            warnings.warn(
+                f"{self._name}: broker thread failed to join within "
+                f"{timeout!r}s and leaked (stuck job?)",
+                RuntimeWarning, stacklevel=2)
+            return False
+        return True
 
     def __enter__(self) -> "SerialWorker":
         return self

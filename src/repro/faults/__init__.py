@@ -1,0 +1,25 @@
+"""Deterministic fault injection + the resilience vocabulary.
+
+``FaultPlan`` schedules faults as pure functions of (seed, site,
+invocation counter); ``FaultInjector`` is its thread-safe runtime face;
+``RetryPolicy`` re-issues transient failures with seeded deterministic
+jitter.  The package is a leaf: stdlib-only, imported by core/, trace/,
+serving/, training/ and launch/ without cycles.
+
+See ROADMAP "Fault injection & resilience" for the contract and the
+fault-site inventory.
+"""
+from repro.faults.errors import (AnnotationTimeout, FaultError,
+                                 InjectedKill, InjectedWorkerCrash,
+                                 RetryExhausted, StragglerTimeout,
+                                 TransientAnnotationError, TransientError)
+from repro.faults.plan import (KINDS, Fault, FaultInjector, FaultPlan,
+                               FaultRule, hash01)
+from repro.faults.retry import RetryPolicy
+
+__all__ = [
+    "AnnotationTimeout", "Fault", "FaultError", "FaultInjector",
+    "FaultPlan", "FaultRule", "InjectedKill", "InjectedWorkerCrash",
+    "KINDS", "RetryExhausted", "RetryPolicy", "StragglerTimeout",
+    "TransientAnnotationError", "TransientError", "hash01",
+]

@@ -90,6 +90,31 @@ def build_parser() -> argparse.ArgumentParser:
                     help="campaign state file: saved every iteration (and "
                          "every --sweep-ckpt-pages pages of the commit "
                          "sweep); an existing file is resumed")
+    ap.add_argument("--autosave", default="", metavar="PATH",
+                    help="crash-safe sidecar: on any unhandled fault past "
+                         "bootstrap the campaign flushes its trace and "
+                         "writes state_dict here (atomic rename); the "
+                         "next invocation resumes from it bit-identically "
+                         "(--state, when present, wins)")
+    ap.add_argument("--sweep-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="straggler wall budget for the async M(.) sweep "
+                         "fold: a hung sweep job raises StragglerTimeout "
+                         "instead of blocking forever (default: wait "
+                         "forever)")
+    ap.add_argument("--fit-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="straggler wall budget for the async retrain "
+                         "fold (default: wait forever)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="demo fault injection: run under the standard "
+                         "transient FaultPlan (flaky annotation backend, "
+                         "one broker-job crash per engine, one torn trace "
+                         "write) with the default RetryPolicy — the "
+                         "campaign must complete and its trace must diff "
+                         "clean against a fault-free sibling")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="fault-plan seed (default: --seed)")
     ap.add_argument("--sweep-ckpt-pages", type=int, default=0,
                     help="cut a resumable commit-sweep cursor into --state "
                          "every N pages (0 disables)")
@@ -219,7 +244,9 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
                  sweep_ckpt_pages: int = 0, iters_per_run: int = 0,
                  trace_path: str = "", campaign_id: str = "campaign",
                  metrics_path: str = "", prom_path: str = "",
-                 profile_dir: str = "", profile_iter: int = 1):
+                 profile_dir: str = "", profile_iter: int = 1,
+                 autosave_path: str = "", sweep_timeout=None,
+                 fit_timeout=None, faults=None, retry=None):
     """Drive one campaign with optional ``--state`` fault tolerance and
     an optional ``--trace`` event log.  Returns (MCALResult | None,
     campaign) — result is None when ``iters_per_run`` preempted the loop
@@ -239,9 +266,17 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
     from repro.serving.sweep import SweepCheckpoint
 
     camp = MCALCampaign(task, service, cfg)
+    camp.sweep_timeout = sweep_timeout
+    camp.fit_timeout = fit_timeout
     blob = None
     if state_path and os.path.exists(state_path):
         with open(state_path) as f:
+            blob = json.load(f)
+    elif autosave_path and os.path.exists(autosave_path):
+        # a prior invocation died past bootstrap and left its crash-safe
+        # sidecar: resume from it (an explicit --state blob wins above —
+        # it is at least as recent, saved every iteration)
+        with open(autosave_path) as f:
             blob = json.load(f)
 
     trace = None
@@ -271,6 +306,12 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
             metrics.attach_trace(metrics_store)
         camp.attach_metrics(metrics)
 
+    if faults is not None:
+        # after attach_trace/attach_metrics: the injector mirrors its
+        # events into whatever the campaign already observes with
+        camp.attach_faults(faults, retry)
+
+    bootstrapped = False
     try:
         if blob is not None:
             camp.load_state_dict(blob["campaign"])
@@ -281,6 +322,7 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
             camp.bootstrap()
             if state_path:
                 _save_state(state_path, camp)
+        bootstrapped = True
 
         if state_path and sweep_ckpt_pages:
             camp.sweep_checkpoint_every = sweep_ckpt_pages
@@ -294,22 +336,38 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
 
             camp.on_sweep_checkpoint = save_cursor
 
-        ran = 0
-        while not camp.done:
-            if profile_dir and ran + 1 == profile_iter:
-                from repro.obs import profile_block
-                with profile_block(profile_dir):
+        try:
+            ran = 0
+            while not camp.done:
+                if profile_dir and ran + 1 == profile_iter:
+                    from repro.obs import profile_block
+                    with profile_block(profile_dir):
+                        camp.iteration()
+                else:
                     camp.iteration()
-            else:
-                camp.iteration()
-            ran += 1
-            if state_path:
-                _save_state(state_path, camp)
-            if iters_per_run and ran >= iters_per_run and not camp.done:
-                return None, camp
-        res = camp.commit()
+                ran += 1
+                if state_path:
+                    _save_state(state_path, camp)
+                if iters_per_run and ran >= iters_per_run and not camp.done:
+                    return None, camp
+            res = camp.commit()
+        except BaseException:
+            # crash-safe autosave: anything that unwinds past bootstrap —
+            # including an injected kill — leaves a resumable sidecar.
+            # Best-effort by design: the original exception always wins.
+            if autosave_path and bootstrapped:
+                try:
+                    if trace is not None:
+                        trace.emit("autosave", path=autosave_path,
+                                   iterations=len(camp.history))
+                    _save_state(autosave_path, camp)
+                except Exception:
+                    pass
+            raise
         if state_path and os.path.exists(state_path):
             os.remove(state_path)   # campaign complete: the state is spent
+        if autosave_path and os.path.exists(autosave_path):
+            os.remove(autosave_path)
         return res, camp
     finally:
         # teardown order matters: close the campaign first (joins the
@@ -401,6 +459,14 @@ def main():
                                   sweep_page=args.sweep_page)
         task.annotation = annotation
 
+    faults = retry = None
+    if args.chaos:
+        from repro.faults import FaultInjector, FaultPlan, RetryPolicy
+        chaos_seed = (args.seed if args.chaos_seed is None
+                      else args.chaos_seed)
+        faults = FaultInjector(FaultPlan.standard_transient(chaos_seed))
+        retry = RetryPolicy(seed=chaos_seed)
+
     campaign_id = (f"{'live' if args.live else args.dataset}-"
                    f"{args.arch}-s{args.seed}")
     res, camp = run_campaign(task, service, cfg, state_path=args.state,
@@ -411,7 +477,11 @@ def main():
                              metrics_path=args.metrics,
                              prom_path=args.prom,
                              profile_dir=args.profile,
-                             profile_iter=args.profile_iter)
+                             profile_iter=args.profile_iter,
+                             autosave_path=args.autosave,
+                             sweep_timeout=args.sweep_timeout,
+                             fit_timeout=args.fit_timeout,
+                             faults=faults, retry=retry)
     if res is None:
         report = {"resumable": True, "state": args.state,
                   "iterations": len(camp.history),
@@ -440,6 +510,9 @@ def main():
         report["trace"] = args.trace
     if args.metrics:
         report["metrics"] = args.metrics
+    if faults is not None:
+        report["chaos"] = {"faults_injected": faults.fired,
+                           "sites_ticked": faults.counters()}
     if annotation is not None:
         report["annotation"] = {
             "votes": annotation.votes_bought,

@@ -53,6 +53,8 @@ import os
 import threading
 from typing import Dict, List, Optional
 
+from repro.faults.errors import FaultError
+
 
 @dataclasses.dataclass
 class SharedEngines:
@@ -157,8 +159,21 @@ class CampaignOrchestrator:
     # -- barrier-parallel helper -------------------------------------------
     def _run_round(self, jobs: List, phase: str = "iteration") -> None:
         """Run ``(tenant, fn)`` jobs — threads + join in concurrent
-        mode, in fleet order serially otherwise.  A worker exception is
-        re-raised on the caller after the barrier (never swallowed).
+        mode, in fleet order serially otherwise (the SAME guarded code
+        path, so failure semantics are mode-independent).
+
+        Failure semantics, applied after the barrier:
+
+        * a TERMINAL resilience fault (:class:`repro.faults.FaultError`:
+          retries exhausted, straggler wall budget blown) QUARANTINES
+          the failing tenant via the controller — the round goes on and
+          the fleet commits everyone else;
+        * anything else still fails the fleet, but no longer loses its
+          siblings: the first error in FLEET ORDER (deterministic, not
+          completion order) is raised with every other concurrent
+          tenant failure attached as ``__notes__`` (and the raw
+          exceptions on ``sibling_errors``).
+
         With metrics attached, each job runs inside a tenant-labeled
         ``round`` span (and a thread-local label bind, so every engine
         metric the tenant records attributes to it)."""
@@ -172,31 +187,48 @@ class CampaignOrchestrator:
                         fn()
                 return run
             jobs = [(t, timed(t, fn)) for t, fn in jobs]
-        if not self.concurrent or len(jobs) <= 1:
-            for _t, fn in jobs:
-                fn()
-            return
-        errors: List[BaseException] = []
+        errors: List = []        # (job_index, tenant, exc) — fleet order
+        quarantines: List = []
         lock = threading.Lock()
 
-        def wrap(fn):
+        def guarded(i, t, fn):
             def run():
                 try:
                     fn()
+                except FaultError as e:
+                    with lock:
+                        quarantines.append((t, e))
                 except BaseException as e:   # noqa: BLE001 - re-raised
                     with lock:
-                        errors.append(e)
+                        errors.append((i, t, e))
             return run
 
-        threads = [threading.Thread(target=wrap(fn),
-                                    name=f"tenant-{t.tenant_id}",
-                                    daemon=True) for t, fn in jobs]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
+        if not self.concurrent or len(jobs) <= 1:
+            for i, (t, fn) in enumerate(jobs):
+                guarded(i, t, fn)()
+        else:
+            threads = [threading.Thread(target=guarded(i, t, fn),
+                                        name=f"tenant-{t.tenant_id}",
+                                        daemon=True)
+                       for i, (t, fn) in enumerate(jobs)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+        for t, e in quarantines:
+            if self.controller.quarantine(t, e, phase=phase) \
+                    and m is not None:
+                m.inc("tenants_quarantined_total", tenant=t.tenant_id)
         if errors:
-            raise errors[0]
+            errors.sort(key=lambda ite: ite[0])
+            primary = errors[0][2]
+            for _i, t, e in errors[1:]:
+                note = (f"concurrent tenant failure [{t.tenant_id}]: "
+                        f"{type(e).__name__}: {e}")
+                if hasattr(primary, "add_note"):      # 3.11+
+                    primary.add_note(note)
+            primary.sibling_errors = tuple(e for _i, _t, e in errors[1:])
+            raise primary
 
     # -- the fleet loop ----------------------------------------------------
     def run(self) -> Dict[str, object]:
@@ -232,8 +264,11 @@ class CampaignOrchestrator:
                     results[t.tenant_id] = res
             return commit
 
-        self._run_round([(t, committer(t)) for t in self.tenants],
-                        phase="commit")
+        # quarantined tenants never commit: their campaign ended on a
+        # fault, and committing would charge residual labels for a
+        # tenant the fleet already wrote off
+        self._run_round([(t, committer(t)) for t in self.tenants
+                         if not t.quarantined], phase="commit")
         self.controller.finish()
         if m is not None:
             # compile-cache census + one final registry snapshot: the
@@ -264,7 +299,8 @@ def build_fleet(features, groundtruth, specs, *, service,
                 trace_dir: str = "", concurrent: bool = True,
                 annotation_service=None, engine_kw: Optional[Dict] = None,
                 task_kw: Optional[Dict] = None,
-                metrics=None) -> CampaignOrchestrator:
+                metrics=None, sweep_timeout: Optional[float] = None,
+                fit_timeout: Optional[float] = None) -> CampaignOrchestrator:
     """Wire a whole fleet: one :class:`SharedEngines` bundle, one
     :class:`~repro.core.task.LiveTask` + campaign +
     :class:`~repro.core.tenant.Tenant` per spec (per-tenant
@@ -303,6 +339,10 @@ def build_fleet(features, groundtruth, specs, *, service,
                         engines=engines, annotation=ann,
                         **(task_kw or {}))
         camp = MCALCampaign(task, service, spec.cfg)
+        # straggler wall budgets (--sweep-timeout/--fit-timeout): a hung
+        # async fold raises StragglerTimeout -> FaultError -> quarantine
+        camp.sweep_timeout = sweep_timeout
+        camp.fit_timeout = fit_timeout
         trace = None
         if trace_dir:
             from repro.trace import TraceStore
@@ -348,6 +388,7 @@ def fleet_report(trace_dir: str) -> Dict:
     fleet_path = os.path.join(trace_dir, "fleet.jsonl")
     if os.path.exists(fleet_path):
         rounds, downgrades, redistributions, final = 0, [], [], None
+        quarantines = []
         ceiling = None
         for e in read_trace(fleet_path):
             if e.kind == "fleet_begin":
@@ -358,11 +399,14 @@ def fleet_report(trace_dir: str) -> Dict:
                 downgrades.append(e.payload)
             elif e.kind == "redistribute":
                 redistributions.append(e.payload)
+            elif e.kind == "quarantine":
+                quarantines.append(e.payload)
             elif e.kind == "fleet_done":
                 final = e.payload
         out["fleet"] = {"ceiling": ceiling, "rounds": rounds,
                         "downgrades": downgrades,
                         "redistributions": redistributions,
+                        "quarantines": quarantines,
                         "final": final}
     return out
 
@@ -377,6 +421,12 @@ def render_fleet(report: Dict) -> str:
                      + ("".join(f"\n    r{d['round']} {d['action']:>13} "
                                 f"{d['tenant']}"
                                 for d in fl["downgrades"])))
+        if fl.get("quarantines"):
+            lines.append(
+                f"  quarantined {len(fl['quarantines'])}"
+                + "".join(f"\n    r{q['round']} {q['tenant']} "
+                          f"({q.get('phase', '?')}: {q.get('error', '')})"
+                          for q in fl["quarantines"]))
         if fl.get("final"):
             lines.append(f"  spent     ${fl['final']['total']:.4f}")
     for tid, s in report.get("tenants", {}).items():
@@ -412,6 +462,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "<trace-dir>/metrics.jsonl and a Prometheus "
                          "snapshot lands at <trace-dir>/metrics.prom "
                          "(render with launch.report --metrics)")
+    ap.add_argument("--sweep-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="straggler wall budget for async M(.) sweep "
+                         "folds: a hung sweep job raises "
+                         "StragglerTimeout and quarantines its tenant "
+                         "(default: wait forever)")
+    ap.add_argument("--fit-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="straggler wall budget for async retrain "
+                         "folds (default: wait forever)")
     ap.add_argument("--pool", type=int, default=2000)
     ap.add_argument("--classes", type=int, default=4)
     ap.add_argument("--difficulty", type=float, default=0.3)
@@ -463,7 +523,9 @@ def main():
                        trace_dir=args.trace_dir,
                        concurrent=not args.serial,
                        annotation_service=annotation,
-                       metrics=metrics)
+                       metrics=metrics,
+                       sweep_timeout=args.sweep_timeout,
+                       fit_timeout=args.fit_timeout)
     try:
         results = orch.run()
     finally:

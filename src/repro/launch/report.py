@@ -44,6 +44,8 @@ def summarize(path: str) -> Dict:
         "burn": None, "annotator": [], "sweeps": {"cuts": 0, "done": 0},
         "fits": {"submitted": 0, "folded": 0},
         "saves": 0, "resumes": 0, "done_reason": None, "commit": None,
+        "faults": {"injected": 0, "retries": 0, "autosaves": 0,
+                   "by_site": {}},
     }
     if not events:
         return out
@@ -91,6 +93,15 @@ def summarize(path: str) -> Dict:
             out["saves"] += 1
         elif e.kind == "resume":
             out["resumes"] += 1
+        elif e.kind == "fault_injected":
+            out["faults"]["injected"] += 1
+            site = p.get("site", "?")
+            out["faults"]["by_site"][site] = (
+                out["faults"]["by_site"].get(site, 0) + 1)
+        elif e.kind == "retry":
+            out["faults"]["retries"] += 1
+        elif e.kind == "autosave":
+            out["faults"]["autosaves"] += 1
         elif e.kind == "done":
             out["done_reason"] = p.get("reason")
             out["status"] = f"done:{p.get('reason')}"
@@ -168,6 +179,15 @@ def render(s: Dict) -> str:
     if s["saves"] or s["resumes"]:
         lines.append(f"fault tolerance: {s['saves']} state saves, "
                      f"{s['resumes']} resumes")
+    f = s.get("faults") or {}
+    if f.get("injected") or f.get("retries") or f.get("autosaves"):
+        sites = ", ".join(f"{k}×{v}" for k, v in
+                          sorted(f.get("by_site", {}).items()))
+        lines.append(
+            f"fault pressure: {f.get('injected', 0)} injected"
+            + (f" ({sites})" if sites else "")
+            + f", {f.get('retries', 0)} retries, "
+              f"{f.get('autosaves', 0)} autosaves")
     if s["commit"]:
         c = s["commit"]
         lines.append(

@@ -69,6 +69,8 @@ import time
 from types import SimpleNamespace
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from concurrent.futures import TimeoutError as FuturesTimeout
+
 from repro.core.worker import SerialWorker
 
 import numpy as np
@@ -130,9 +132,11 @@ class SweepFuture:
     as ``AnnotationFuture`` — hardening (cancellation semantics, mapped
     results, timeout behaviour) lands here once for all three."""
 
-    def __init__(self, future, map_result: Optional[Callable] = None):
+    def __init__(self, future, map_result: Optional[Callable] = None,
+                 label: str = ""):
         self._future = future
         self._map = map_result
+        self._label = label
         self._done_value: Any = None
         self._mapped = False
 
@@ -143,8 +147,21 @@ class SweepFuture:
         return self._future.cancel()
 
     def result(self, timeout: Optional[float] = None):
+        """The fold.  With a ``timeout`` (seconds) the wait is a wall
+        budget: a job still running when it expires raises
+        :class:`~repro.faults.errors.StragglerTimeout` — the straggler
+        detection the campaign's ``sweep_timeout``/``fit_timeout``
+        knobs (and the launchers' ``--sweep-timeout``/``--fit-timeout``)
+        arm.  The job itself keeps running on its daemon worker; the
+        future stays valid for a later (longer) wait."""
         if not self._mapped:
-            out = self._future.result(timeout)
+            try:
+                out = self._future.result(timeout)
+            except FuturesTimeout:
+                from repro.faults.errors import StragglerTimeout
+                raise StragglerTimeout(
+                    f"{self._label or 'worker job'} still running after "
+                    f"its {timeout:g}s wall budget") from None
             self._done_value = self._map(out) if self._map else out
             self._mapped = True
         return self._done_value
@@ -458,6 +475,20 @@ class PoolSweepRunner:
         self.trace = None
         # runtime metrics (repro.obs.MetricsRegistry); None = free no-op
         self.metrics = None
+        # resilience seam: chaos injector + broker re-dispatch policy,
+        # handed to the lazy SerialWorker (site ``worker.pool-sweep``)
+        self.faults = None
+        self.retry = None
+
+    def attach_faults(self, faults, retry=None) -> None:
+        """Wire the fault injector (and optional re-dispatch policy)
+        into the runner's broker: every submitted job ticks the
+        ``worker.pool-sweep`` site, and transient crashes re-dispatch."""
+        self.faults = faults
+        if retry is not None:
+            self.retry = retry
+        if self._exec is not None:
+            self._exec.attach_faults(faults, retry)
 
     def _emit(self, kind: str, **payload) -> None:
         if self.trace is not None:
@@ -547,12 +578,13 @@ class PoolSweepRunner:
         return SweepFuture(
             self._executor().submit(self.run, params, pool, sink,
                                     checkpoint=checkpoint),
-            map_result)
+            map_result, label=f"sweep[{sink.kind}]")
 
     def submit_call(self, fn: Callable, *args, **kw) -> SweepFuture:
         """Run an arbitrary callable on the sweep worker (composite jobs
         like feature-sweep + device k-center that end in a sweep)."""
-        return SweepFuture(self._executor().submit(fn, *args, **kw))
+        return SweepFuture(self._executor().submit(fn, *args, **kw),
+                           label="sweep[call]")
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -573,7 +605,9 @@ class PoolSweepRunner:
 
     def _executor(self) -> SerialWorker:
         if self._exec is None:
-            self._exec = SerialWorker("pool-sweep")
+            self._exec = SerialWorker("pool-sweep", retry=self.retry,
+                                      faults=self.faults)
+            self._exec.metrics = self.metrics
         return self._exec
 
     def _restore(self, sink, n: int,

@@ -49,6 +49,12 @@ OBSERVABILITY_KINDS = frozenset({
     "state_save", "resume", "vote_round", "topup", "annotator_snapshot",
     "sweep_cut", "sweep_done", "fit_submit", "fit_done",
     "metric_span", "metric_snapshot",
+    # the resilience layer's telemetry (repro.faults): injected faults,
+    # retry re-issues, and fleet quarantine decisions ride the trace but
+    # never enter replay/diff — a chaos run whose retries all succeed
+    # diffs CLEAN against its fault-free sibling (the bench_faults /
+    # test_faults acceptance invariant)
+    "fault_injected", "retry", "quarantine", "autosave",
 })
 
 ALL_KINDS = REPLAY_KINDS | OBSERVABILITY_KINDS

@@ -40,8 +40,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import threading
 import time
+import warnings
 from typing import Dict, Iterator, List, Optional
 
 import numpy as np
@@ -109,6 +111,21 @@ class TraceStore:
         self._buf: List[str] = []
         self._lock = threading.Lock()
         self._f = open(self.path, "a" if _append else "w")
+        # -- torn-write tolerance -------------------------------------------
+        # byte offset of the last DURABLE event boundary: a flush that
+        # dies mid-write (OSError) may leave a torn tail past it; the
+        # next flush truncates back to this offset and rewrites the kept
+        # buffer, so the file never carries duplicate or gapped seqs
+        self._end_pos = os.path.getsize(self.path) if _append else 0
+        self._torn: Optional[int] = None
+        self.write_errors = 0          # flushes that hit an OSError
+        self._faults = None            # chaos injector (attach_faults)
+
+    def attach_faults(self, faults) -> None:
+        """Wire the chaos seam: every buffer flush ticks the
+        ``trace.flush`` fault site (an injected fault emulates a torn
+        write: half the payload reaches the file, then OSError)."""
+        self._faults = faults
 
     # -- writing -----------------------------------------------------------
     @property
@@ -135,16 +152,59 @@ class TraceStore:
             self._flush_locked()
 
     def _flush_locked(self) -> None:
+        """One buffer flush, torn-write tolerant: an OSError mid-write
+        (a full disk, a flaky volume, an injected fault) KEEPS the
+        buffer and remembers the last durable byte offset; the next
+        flush truncates the torn tail and rewrites the whole kept buffer
+        — readers never see duplicate or gapped sequence numbers, only
+        (at worst) one truncated final line, which ``read_trace``
+        already tolerates.  Write faults are recorded in
+        ``write_errors``; they are deliberately NOT raised into the
+        emitting decision site (losing a campaign to its own audit log
+        would invert the dependency)."""
         if self._f.closed:
             return
-        if self._buf:
-            self._f.write("\n".join(self._buf) + "\n")
-            self._buf.clear()
-        self._f.flush()
+        try:
+            if self._torn is not None:
+                # the torn write left the position past the durable
+                # boundary: rewind (append-mode writes re-seek to EOF,
+                # which the truncate puts exactly at the boundary)
+                self._f.seek(self._torn)
+                self._f.truncate(self._torn)
+                self._torn = None
+            if self._buf:
+                payload = "\n".join(self._buf) + "\n"
+                if self._faults is not None and \
+                        self._faults.tick("trace.flush",
+                                          emit=False) is not None:
+                    # emulate the torn write (emit=False: we hold the
+                    # store lock — a fault_injected emit would deadlock)
+                    self._f.write(payload[:max(len(payload) // 2, 1)])
+                    self._f.flush()
+                    raise OSError("injected trace-write fault")
+                self._f.write(payload)
+                self._f.flush()
+                # ensure_ascii JSON + "\n" joins: byte length == length
+                self._end_pos += len(payload)
+                self._buf.clear()
+            else:
+                self._f.flush()
+        except OSError:
+            self.write_errors += 1
+            self._torn = self._end_pos
 
     def close(self) -> None:
         with self._lock:
             self._flush_locked()
+            if self._buf or self._torn is not None:
+                # one recovery attempt for a store that went down dirty
+                self._flush_locked()
+            if self._buf or self._torn is not None:
+                warnings.warn(
+                    f"trace {self.path}: closed with {len(self._buf)} "
+                    f"unflushed events after {self.write_errors} write "
+                    f"errors — the tail of this trace is lost",
+                    RuntimeWarning, stacklevel=2)
             if not self._f.closed:
                 self._f.close()
 

@@ -151,6 +151,20 @@ class FitEngine:
         self._submit_seq = 0
         # runtime metrics (repro.obs.MetricsRegistry); None = free no-op
         self.metrics = None
+        # resilience seam: chaos injector + broker re-dispatch policy,
+        # handed to the lazy SerialWorker (site ``worker.fit-engine``)
+        self.faults = None
+        self.retry = None
+
+    def attach_faults(self, faults, retry=None) -> None:
+        """Wire the fault injector (and optional re-dispatch policy)
+        into the fit broker: every submitted job ticks the
+        ``worker.fit-engine`` site, and transient crashes re-dispatch."""
+        self.faults = faults
+        if retry is not None:
+            self.retry = retry
+        if self._exec is not None:
+            self._exec.attach_faults(faults, retry)
 
     # -- program construction ------------------------------------------------
 
@@ -303,7 +317,9 @@ class FitEngine:
 
     def _executor(self) -> SerialWorker:
         if self._exec is None:
-            self._exec = SerialWorker("fit-engine")
+            self._exec = SerialWorker("fit-engine", retry=self.retry,
+                                      faults=self.faults)
+            self._exec.metrics = self.metrics
         return self._exec
 
     def close(self) -> None:
@@ -341,13 +357,13 @@ class FitEngine:
         ``PoolSweepRunner.submit``); the caller overlaps its own work and
         synchronizes at ``result()``."""
         return FitFuture(self._executor().submit(
-            self._traced(self.fit, "fit"), rng, x, y))
+            self._traced(self.fit, "fit"), rng, x, y), label="fit")
 
     def submit_call(self, fn: Callable, *args, **kw) -> FitFuture:
         """Run an arbitrary callable on the fit worker (composite jobs
         like retrain + measurement sweep that start with a fit)."""
         return FitFuture(self._executor().submit(
-            self._traced(fn, "call"), *args, **kw))
+            self._traced(fn, "call"), *args, **kw), label="fit[call]")
 
     # -- compile-cache bookkeeping ------------------------------------------
 

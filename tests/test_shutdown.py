@@ -73,6 +73,27 @@ def test_worker_propagates_exceptions():
         assert w.submit(lambda: 7).result(timeout=5) == 7
 
 
+def test_worker_close_reports_joined_thread():
+    w = SerialWorker("t")
+    assert w.close(timeout=1) is True       # never started: nothing leaks
+    w2 = SerialWorker("t2")
+    w2.submit(lambda: None).result(timeout=5)
+    assert w2.close(timeout=5) is True
+    assert w2.close(timeout=5) is True      # idempotent, still joined
+
+
+def test_worker_close_times_out_on_stuck_job_and_warns():
+    import threading
+    gate = threading.Event()
+    w = SerialWorker("t")
+    w.submit(gate.wait)
+    with pytest.warns(RuntimeWarning, match="failed to join"):
+        assert w.close(timeout=0.05) is False    # leaked (daemon) thread
+    gate.set()                              # unstick; the daemon drains
+    w._thread.join(timeout=5)
+    assert not w.alive
+
+
 def test_worker_close_drains_queued_jobs():
     done = []
     w = SerialWorker("t")

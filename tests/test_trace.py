@@ -102,6 +102,46 @@ def test_resume_truncates_tail_and_continues_without_gaps(tmp_path):
         TraceStore.resume(p, 100)
 
 
+def test_torn_write_recovers_without_duplicate_or_gapped_seqs(tmp_path):
+    """A flush that dies mid-write (injected OSError after half the
+    payload) keeps the buffer; the next flush truncates the torn tail
+    and rewrites it — readers never see duplicate or gapped seqs."""
+    from repro.faults import FaultInjector, FaultPlan, FaultRule
+    p = str(tmp_path / "t.jsonl")
+    tr = TraceStore(p, "camp", flush_every=1000)
+    tr.attach_faults(FaultInjector(FaultPlan(rules=(
+        FaultRule("trace.flush", "oserror", at=(0,)),))))
+    for i in range(4):
+        tr.emit("charge", total=float(i))
+    tr.flush()                       # torn: half the payload, then OSError
+    assert tr.write_errors == 1
+    assert os.path.getsize(p) > 0    # the torn tail IS on disk...
+    assert len(read_trace(p)) < 4    # ...but short, ending mid-line
+    tr.emit("charge", total=4.0)     # emitting into a torn store is safe
+    tr.flush()                       # recovery: truncate + full rewrite
+    tr.close()
+    ev = read_trace(p)
+    assert [e.seq for e in ev] == [0, 1, 2, 3, 4]
+    assert [e.payload["total"] for e in ev] == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert tr.write_errors == 1
+
+
+def test_store_down_hard_warns_but_never_raises_into_emitters(tmp_path):
+    """Every flush failing (the volume is gone): emit/flush stay silent
+    — losing a campaign to its own audit log would invert the
+    dependency — and close() warns about the lost tail."""
+    from repro.faults import FaultInjector, FaultPlan, FaultRule
+    p = str(tmp_path / "t.jsonl")
+    tr = TraceStore(p, "camp", flush_every=1)   # flush on every emit
+    tr.attach_faults(FaultInjector(FaultPlan(rules=(
+        FaultRule("trace.flush", "oserror", rate=1.0),))))
+    for i in range(3):
+        tr.emit("charge", total=float(i))       # 3 failed flushes, no raise
+    assert tr.write_errors == 3
+    with pytest.warns(RuntimeWarning, match="unflushed"):
+        tr.close()
+
+
 # ---------------------------------------------------------------------------
 # campaign level: replay-equals-live, diff, resume append-only
 # ---------------------------------------------------------------------------
