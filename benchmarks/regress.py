@@ -1,0 +1,187 @@
+# Benchmark-regression observatory.  jax-free: reads history JSON only.
+"""Cross-PR perf-trajectory watchdog over ``benchmarks/history/``.
+
+Every benchmark run writes a ``BENCH_<run>.json`` record (per-gate
+speedups + jax version/backend); each PR checks one into
+``benchmarks/history/``, so the in-tree trajectory is the series of
+gate values across PRs.  This module is the judge over that series:
+
+  PYTHONPATH=src python -m benchmarks.regress
+  PYTHONPATH=src python -m benchmarks.regress --json
+  PYTHONPATH=src python -m benchmarks.run --check-history   # same thing
+
+For every gate that appears in the newest record, the baseline is the
+**median of up to the last ``--window`` prior values** of that gate
+(median, not mean — one anomalously fast CI run must not inflate the
+bar; missing-in-some-PRs gates simply have shorter series).  The
+verdict per gate is latest/baseline:
+
+  ratio <  --fail-under (0.70)   FAIL  — the gate lost >30% vs trend
+  ratio <  --warn-under (0.90)   WARN  — drifting down, not yet broken
+  otherwise                      ok    (``new`` when no prior exists)
+
+Speedup gates are ratios-vs-host already, so they are machine-portable
+enough to compare across PR records from the same CI class; the
+fail bar is deliberately loose (0.70) because CI noise on small smoke
+shapes is real — the observatory exists to catch step-function
+regressions (a fused kernel silently falling back to the host loop),
+not 5% jitter.
+
+Exit status: 1 if any gate FAILs (``--warn-only`` downgrades that to
+0 — the smoke log rides this mode so history drift is visible without
+blocking an unrelated PR).  No jax import anywhere on this path.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+HISTORY_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "history")
+FAIL_UNDER = 0.70
+WARN_UNDER = 0.90
+BASELINE_WINDOW = 4
+
+
+def load_history(history_dir: str = HISTORY_DIR) -> List[Dict]:
+    """Every ``BENCH_*.json`` under ``history_dir``, oldest first.
+
+    Records are ordered by ``(timestamp, run)`` — the timestamp is the
+    authoritative axis (run ids are stable and orderable within one
+    naming scheme, but the scheme may change); the run id breaks
+    same-second ties deterministically."""
+    records = []
+    for path in glob.glob(os.path.join(history_dir, "BENCH_*.json")):
+        with open(path) as f:
+            blob = json.load(f)
+        blob["_path"] = path
+        records.append(blob)
+    records.sort(key=lambda b: (b.get("timestamp", ""), b.get("run", "")))
+    return records
+
+
+def gate_series(records: List[Dict]) -> Dict[str, List[Dict]]:
+    """Per-gate value series across the (ordered) records."""
+    series: Dict[str, List[Dict]] = {}
+    for rec in records:
+        for gate, value in (rec.get("gates") or {}).items():
+            if value is None:
+                continue
+            series.setdefault(gate, []).append(
+                {"run": rec.get("run", "?"), "value": float(value)})
+    return series
+
+
+def _median(values: List[float]) -> float:
+    vs = sorted(values)
+    n = len(vs)
+    return vs[n // 2] if n % 2 else 0.5 * (vs[n // 2 - 1] + vs[n // 2])
+
+
+def evaluate(records: List[Dict], *, fail_under: float = FAIL_UNDER,
+             warn_under: float = WARN_UNDER,
+             window: int = BASELINE_WINDOW) -> Dict:
+    """The regression report: one verdict per gate in the newest record,
+    judged against the rolling-median baseline of its prior values."""
+    report: Dict = {"records": len(records), "gates": [], "status": "ok",
+                    "latest_run": (records[-1].get("run")
+                                   if records else None)}
+    if len(records) < 2:
+        report["status"] = "insufficient-history"
+        return report
+    series = gate_series(records)
+    latest_run = records[-1].get("run", "?")
+    worst = "ok"
+    for gate in sorted(series):
+        points = series[gate]
+        if points[-1]["run"] != latest_run:
+            # gate dropped out of the newest record: trend still shown,
+            # but a missing gate is its own kind of signal
+            report["gates"].append({
+                "gate": gate, "verdict": "missing", "latest": None,
+                "baseline": _median([p["value"] for p in points[-window:]]),
+                "ratio": None, "last_seen": points[-1]["run"],
+                "series": points})
+            continue
+        latest = points[-1]["value"]
+        prior = [p["value"] for p in points[:-1]][-window:]
+        if not prior:
+            report["gates"].append({
+                "gate": gate, "verdict": "new", "latest": latest,
+                "baseline": None, "ratio": None, "series": points})
+            continue
+        baseline = _median(prior)
+        ratio = latest / baseline if baseline > 0 else None
+        if ratio is None:
+            verdict = "new"
+        elif ratio < fail_under:
+            verdict = "fail"
+        elif ratio < warn_under:
+            verdict = "warn"
+        else:
+            verdict = "ok"
+        if verdict == "fail" or (verdict == "warn" and worst != "fail"):
+            worst = verdict
+        report["gates"].append({
+            "gate": gate, "verdict": verdict, "latest": latest,
+            "baseline": baseline, "ratio": ratio, "series": points})
+    report["status"] = worst
+    return report
+
+
+def render(report: Dict) -> str:
+    """The terminal view of one :func:`evaluate` pass."""
+    lines = [f"# regression observatory: {report['records']} records, "
+             f"latest={report['latest_run']}  [{report['status']}]"]
+    if report["status"] == "insufficient-history":
+        lines.append("# need >= 2 history records to judge a trend")
+        return "\n".join(lines)
+    mark = {"ok": " ", "new": "+", "warn": "~", "fail": "!",
+            "missing": "?"}
+    lines.append(f"{'':1} {'gate':<34} {'latest':>8} {'baseline':>9} "
+                 f"{'ratio':>7}  trend")
+    for g in report["gates"]:
+        trend = " -> ".join(f"{p['value']:g}" for p in g["series"][-5:])
+        latest = f"{g['latest']:.3f}" if g["latest"] is not None else "-"
+        base = (f"{g['baseline']:.3f}" if g["baseline"] is not None
+                else "-")
+        ratio = f"{g['ratio']:.3f}" if g["ratio"] is not None else "-"
+        lines.append(f"{mark[g['verdict']]:1} {g['gate']:<34} "
+                     f"{latest:>8} {base:>9} {ratio:>7}  {trend}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="judge benchmark gate trends across the in-tree "
+                    "BENCH_*.json history")
+    ap.add_argument("--history", default=HISTORY_DIR, metavar="DIR",
+                    help="history directory (default: benchmarks/history)")
+    ap.add_argument("--fail-under", type=float, default=FAIL_UNDER)
+    ap.add_argument("--warn-under", type=float, default=WARN_UNDER)
+    ap.add_argument("--window", type=int, default=BASELINE_WINDOW,
+                    help="rolling baseline width (median of up to N "
+                         "prior values per gate)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full report as JSON")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="always exit 0 (the smoke log's advisory mode)")
+    args = ap.parse_args(argv)
+    report = evaluate(load_history(args.history),
+                      fail_under=args.fail_under,
+                      warn_under=args.warn_under, window=args.window)
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        print(render(report))
+    if args.warn_only:
+        return 0
+    return 1 if report["status"] == "fail" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

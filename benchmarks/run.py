@@ -28,6 +28,10 @@
                            vs fault-free sibling + <= 5% idle-injector
                            overhead gate; smoke leaves its chaos trace
                            under artifacts/)
+  bench_health             campaign health engine (<= 3% overhead gate:
+                           health-monitored noisy campaign vs its
+                           monitor-off sibling, decision streams diff
+                           clean, same total cost)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only table1
@@ -35,14 +39,19 @@ CI smoke: PYTHONPATH=src python -m benchmarks.run --smoke
           (small-shape fit + sweep + scoring + k-center + annotation +
           orchestrator engine legs, speedup gates enforced — the CI
           matrix runs this on both jax legs)
+History:  PYTHONPATH=src python -m benchmarks.run --check-history
+          (the regression observatory: judge every gate's trend across
+          benchmarks/history/ and fail on a >30% drop vs the rolling
+          baseline — no jax import, see benchmarks/regress.py)
 
 Every invocation additionally writes a machine-readable
-``BENCH_<run>.json`` (``--json`` overrides the path, ``--run-id`` the
-run name): per-row us_per_call + parsed per-gate speedups + pool sizes +
-the jax version/backend, so the perf trajectory is tracked across PRs —
-CI uploads it as a workflow artifact, and each PR that moves a gate
-checks a record into ``benchmarks/history/`` (one JSON per PR; the
-cross-PR trajectory lives in-tree, not just in CI retention).
+``BENCH_<run>.json`` into ``benchmarks/history/`` (``--json`` overrides
+the path, ``--run-id`` the stable orderable run name): per-row
+us_per_call + parsed per-gate speedups + pool sizes + the jax
+version/backend, so the perf trajectory is tracked across PRs — CI
+uploads it as a workflow artifact, and the cross-PR trajectory lives
+in-tree, not just in CI retention.  The smoke leg ends with a warn-only
+observatory pass over that history so drift shows up in every CI log.
 """
 from __future__ import annotations
 
@@ -50,6 +59,7 @@ import argparse
 import importlib
 import inspect
 import json
+import os
 import sys
 import time
 import traceback
@@ -73,7 +83,11 @@ MODULES = (
     "bench_orchestrator",
     "bench_obs",
     "bench_faults",
+    "bench_health",
 )
+
+HISTORY_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "history")
 
 
 def write_bench_json(path: str, run_id: str, mode: str, rows, errors) -> None:
@@ -111,7 +125,7 @@ def run_smoke():
     benchmarks with their speedup gates ENFORCED (a gate miss fails the
     job).  Returns (status, rows, errors)."""
     from benchmarks import (bench_annotation, bench_faults, bench_fit,
-                            bench_obs, bench_orchestrator,
+                            bench_health, bench_obs, bench_orchestrator,
                             bench_selection, bench_sweep, bench_trace)
 
     print("name,us_per_call,derived")
@@ -128,6 +142,7 @@ def run_smoke():
         ("bench_orchestrator[smoke]", bench_orchestrator.run_smoke),
         ("bench_obs[smoke]", bench_obs.run_smoke),
         ("bench_faults[smoke]", bench_faults.run_smoke),
+        ("bench_health[smoke]", bench_health.run_smoke),
     ):
         try:
             for row in fn():
@@ -138,6 +153,14 @@ def run_smoke():
             errors.append(f"{name}:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
             print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
+    # warn-only observatory pass: history drift belongs in every smoke
+    # log, but must never fail a PR that didn't touch perf
+    try:
+        from benchmarks import regress
+        report = regress.evaluate(regress.load_history())
+        print(regress.render(report), file=sys.stderr)
+    except Exception as e:
+        print(f"# regress observatory skipped: {e}", file=sys.stderr)
     return status, rows, errors
 
 
@@ -153,7 +176,11 @@ def main() -> None:
                          "(default: the mode + jax version)")
     ap.add_argument("--json", default="",
                     help="path for the machine-readable record "
-                         "(default: BENCH_<run>.json)")
+                         "(default: benchmarks/history/BENCH_<run>.json)")
+    ap.add_argument("--check-history", action="store_true",
+                    help="run the regression observatory over "
+                         "benchmarks/history/ and exit (no benchmarks "
+                         "run, no jax import)")
     ap.add_argument("--from-trace", default="", metavar="DIR",
                     help="reproduce paper-table campaign cells from "
                          "stored traces in DIR when present (modules "
@@ -161,10 +188,24 @@ def main() -> None:
                          "live cells record their trace there)")
     args = ap.parse_args()
 
+    if args.check_history:
+        # the observatory is jax-free by design: judging history must
+        # work on a box that can't even import the benchmarks
+        from benchmarks import regress
+        sys.exit(regress.main([]))
+
     def finish(mode: str, status: int, rows, errors):
         import jax
         run_id = args.run_id or f"{mode}-jax{jax.__version__}"
-        path = args.json or f"BENCH_{run_id}.json"
+        # records ALWAYS land in benchmarks/history/ (stable, orderable
+        # run id in the name) — the in-tree trajectory only works if
+        # every run contributes to it, not just runs started from the
+        # right CWD
+        if args.json:
+            path = args.json
+        else:
+            os.makedirs(HISTORY_DIR, exist_ok=True)
+            path = os.path.join(HISTORY_DIR, f"BENCH_{run_id}.json")
         write_bench_json(path, run_id, mode, rows, errors)
         sys.exit(status)
 

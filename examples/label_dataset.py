@@ -3,6 +3,7 @@
     PYTHONPATH=src python examples/label_dataset.py
     PYTHONPATH=src python examples/label_dataset.py --noisy
     PYTHONPATH=src python examples/label_dataset.py --trace run.jsonl
+    PYTHONPATH=src python examples/label_dataset.py --slo examples/slo.json
 
 Everything is live: a JAX MLP classifier is (re)trained by the framework's
 own train loop on every MCAL iteration, the pool is scored with the
@@ -49,6 +50,18 @@ retry counts print at the end; the full launcher spells it ``--chaos``
 (+ ``--chaos-seed``), alongside ``--autosave PATH`` (crash-safe
 resume sidecar) and ``--sweep-timeout`` / ``--fit-timeout``
 (straggler wall budgets).
+
+``--slo examples/slo.json`` runs the campaign under the streaming
+health engine (``repro.obs.health``): the declarative SLO contract is
+judged at every iteration alongside the full detector suite (budget
+burn, annotator drift, power-law fit quality), and hysteresis-gated
+``alert`` / ``slo_breach`` events ride the trace when ``--trace`` is
+also given — render them with ``python -m repro.launch.report
+run.jsonl --health`` (add ``--watch 2`` for a live alert panel).
+Judgment counts print at the end; the full launcher spells it
+``--slo SPEC.json`` too (plus ``repro.launch.orchestrator``'s
+``--slo-enforce``, where breach verdicts drive the fleet's downgrade
+cascade).
 """
 import sys
 
@@ -62,6 +75,8 @@ METRICS = "--metrics" in sys.argv
 CHAOS = "--chaos" in sys.argv
 TRACE = (sys.argv[sys.argv.index("--trace") + 1]
          if "--trace" in sys.argv else "")
+SLO = (sys.argv[sys.argv.index("--slo") + 1]
+       if "--slo" in sys.argv else "")
 POOL, CLASSES, DIM = 6_000, 10, 32
 
 print(f"generating a {POOL:,}-sample / {CLASSES}-class pool "
@@ -103,13 +118,20 @@ if CHAOS:
     print("chaos mode: standard transient fault plan injected "
           "(flaky annotation backend, one crash per engine broker, "
           "one torn trace write)")
+health = None
+if SLO:
+    from repro.obs import HealthEngine, SLOSpec
+    spec = SLOSpec.load(SLO)
+    health = HealthEngine(spec)
+    print(f"health engine armed: SLO contract {spec.to_dict()} "
+          f"judged every iteration (+ burn/drift/fit detectors)")
 if TRACE:
     from repro.trace import TraceStore
     with TraceStore(TRACE, "example-live-s0") as tr:
         if metrics is not None:
             metrics.attach_trace(tr)
         result = run_mcal(task, AMAZON, cfg, trace=tr, metrics=metrics,
-                          faults=faults, retry=retry)
+                          faults=faults, retry=retry, health=health)
         if metrics is not None:
             metrics.emit_snapshot(scope="example")
     print(f"trace          : {TRACE} (replay: python -m "
@@ -118,7 +140,7 @@ if TRACE:
              if metrics is not None else ")"))
 else:
     result = run_mcal(task, AMAZON, cfg, metrics=metrics,
-                      faults=faults, retry=retry)
+                      faults=faults, retry=retry, health=health)
 
 human_all = POOL * AMAZON.price_per_label
 bound = eps_target
@@ -146,6 +168,14 @@ if faults is not None:
     print(f"chaos          : {faults.fired} faults injected across "
           f"{sum(faults.counters().values()):,} seam ticks "
           f"({', '.join(sorted(faults.counters()))}) — all recovered")
+if health is not None:
+    c = health.counts()
+    act = ", ".join(c["active"]) or "none"
+    print(f"health         : {c['alerts_raised']} alerts raised / "
+          f"{c['alerts_cleared']} cleared, {c['slo_breaches']} SLO "
+          f"breaches over {c['ticks']} ticks (active: {act})"
+          + (f" — panel: python -m repro.launch.report {TRACE} --health"
+             if TRACE else ""))
 if metrics is not None:
     snap = metrics.snapshot()
     spans = sorted((h for h in snap["histograms"]

@@ -290,6 +290,8 @@ class MCALCampaign:
         self.metrics = None
         # chaos injector (attach_faults): None = injection off
         self.faults = None
+        # streaming health engine (attach_health): None = monitoring off
+        self.health = None
 
     def attach_trace(self, trace) -> None:
         """Wire the campaign event bus through every engine family: this
@@ -344,6 +346,21 @@ class MCALCampaign:
             ann.attach_faults(faults, retry)
         if hasattr(self.task, "attach_faults"):
             self.task.attach_faults(faults, retry)
+
+    def attach_health(self, health) -> None:
+        """Wire a :class:`repro.obs.health.HealthEngine` to this
+        campaign's iteration boundary: after every iteration the engine
+        samples the ledger/fit state and emits its hysteresis-gated
+        ``alert`` events.  Call AFTER ``attach_trace``/``attach_metrics``
+        — the engine inherits this campaign's trace and registry unless
+        it already has its own.  Alert kinds are OBSERVABILITY_KINDS, so
+        a monitored campaign's decision stream diffs clean against a
+        monitor-off sibling's."""
+        self.health = health
+        if health.trace is None and self.trace is not None:
+            health.attach_trace(self.trace)
+        if health.metrics is None and self.metrics is not None:
+            health.attach_metrics(self.metrics)
 
     def _mspan(self, name: str):
         """A named campaign-phase span, or a no-op context when metrics
@@ -537,6 +554,8 @@ class MCALCampaign:
             self.metrics.inc("campaign_iterations_total")
             self.metrics.set_gauge("campaign_spent_total",
                                    float(self.pool.ledger.total))
+        if self.health is not None:
+            self.health.tick_campaign(self)
         return rec
 
     def _iteration_impl(self, *, acquire: bool = True,
@@ -1061,7 +1080,8 @@ def run_mcal(task, service: LabelingService,
              trace: Optional[object] = None,
              metrics: Optional[object] = None,
              faults: Optional[object] = None,
-             retry: Optional[object] = None) -> MCALResult:
+             retry: Optional[object] = None,
+             health: Optional[object] = None) -> MCALResult:
     camp = MCALCampaign(task, service, cfg)
     if trace is not None:
         camp.attach_trace(trace)
@@ -1069,6 +1089,9 @@ def run_mcal(task, service: LabelingService,
         camp.attach_metrics(metrics)
     if faults is not None:
         camp.attach_faults(faults, retry)
+    if health is not None:
+        # last: the engine inherits whatever trace/metrics are attached
+        camp.attach_health(health)
     return camp.run()
 
 

@@ -200,13 +200,20 @@ class FleetController:
     decision emits into the fleet trace."""
 
     def __init__(self, tenants: List[Tenant],
-                 global_budget: Optional[float] = None, trace=None):
+                 global_budget: Optional[float] = None, trace=None, *,
+                 health=None, slo_enforce: bool = False):
         ids = [t.tenant_id for t in tenants]
         assert len(set(ids)) == len(ids), f"duplicate tenant ids: {ids}"
         self.tenants = list(tenants)
         self.global_budget = global_budget
         self.trace = trace
         self.round = 0
+        # streaming health engine (repro.obs.health): ticked at every
+        # rebalance boundary; with slo_enforce its ENFORCEABLE breach
+        # verdicts drive the downgrade cascade (same walk order)
+        self.health = health
+        self.slo_enforce = bool(slo_enforce)
+        self._slo_strikes: Dict[str, int] = {}
         if trace is not None:
             trace.emit("fleet_begin", ceiling=global_budget, tenants=[
                 {"tenant_id": t.tenant_id, "priority": t.priority,
@@ -253,6 +260,11 @@ class FleetController:
         downgrades = []
         if self.global_budget is not None:
             downgrades = self._cascade()
+        if self.health is not None:
+            verdicts = self.health.tick_fleet(self.tenants,
+                                              tick=self.round)
+            if self.slo_enforce and verdicts:
+                downgrades = downgrades + self._enforce_slo(verdicts)
         summary = {"round": int(self.round), "spent": float(self.spent()),
                    "projected": float(self.projected()),
                    "ceiling": self.global_budget,
@@ -314,6 +326,44 @@ class FleetController:
                           "ceiling": float(self.global_budget)}
                     applied.append(ev)
                     self._emit("downgrade", **ev)
+        return applied
+
+    def _enforce_slo(self, verdicts: List[Dict]) -> List[Dict]:
+        """``--slo-enforce``: breach verdicts drive the downgrade
+        cascade.  Only ENFORCEABLE clauses count (the deterministic
+        ledger/fit-derived ones — wall-clock latency breaches alert but
+        never downgrade).  Breaching tenants are walked in the same
+        ``(priority asc, tenant_id asc)`` order as the budget cascade;
+        each consecutive breached rebalance escalates one cascade step —
+        pause first, then shrink_votes, then force_commit — so a breach
+        that a round of sitting out (or cheaper votes) cures never costs
+        the tenant its campaign.  Verdicts are pure functions of the
+        tenants' ledgers and fits, so the walk (hence the ``downgrade``
+        event stream) is deterministic."""
+        breached: Dict[str, str] = {}
+        for v in verdicts:
+            if v.get("enforceable"):
+                breached.setdefault(v["tenant"], v["slo"])
+        applied: List[Dict] = []
+        for t in self._cascade_order():
+            if t.tenant_id not in breached:
+                continue
+            strike = self._slo_strikes.get(t.tenant_id, 0)
+            self._slo_strikes[t.tenant_id] = strike + 1
+            for action in DOWNGRADE_ACTIONS[min(strike,
+                                                len(DOWNGRADE_ACTIONS)
+                                                - 1):]:
+                if t.apply_downgrade(action):
+                    ev = {"round": int(self.round),
+                          "tenant": t.tenant_id, "action": action,
+                          "slo": breached[t.tenant_id],
+                          "projected": float(self.projected()),
+                          "ceiling": (float(self.global_budget)
+                                      if self.global_budget is not None
+                                      else None)}
+                    applied.append(ev)
+                    self._emit("downgrade", **ev)
+                    break
         return applied
 
     def resolve_stall(self) -> None:

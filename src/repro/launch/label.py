@@ -179,6 +179,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "the campaign trace (replay/diff ignore them).  "
                          "View with python -m repro.launch.report "
                          "--metrics")
+    ap.add_argument("--slo", default="", metavar="SPEC.json",
+                    help="streaming health engine: judge the campaign "
+                         "against the declarative SLO spec (cost per "
+                         "committed label, iteration-latency p95, "
+                         "projected quality) plus the detector suite "
+                         "(budget burn ETA, annotator drift, fit "
+                         "quality, cache storms, queue saturation, "
+                         "fault pressure) at every iteration boundary; "
+                         "hysteresis-gated alert events interleave into "
+                         "--trace (observability kinds — replay/diff "
+                         "ignore them).  Render with python -m "
+                         "repro.launch.report --health")
     ap.add_argument("--prom", default="", metavar="PATH",
                     help="write a Prometheus textfile snapshot of the "
                          "metrics registry at campaign teardown")
@@ -246,7 +258,8 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
                  metrics_path: str = "", prom_path: str = "",
                  profile_dir: str = "", profile_iter: int = 1,
                  autosave_path: str = "", sweep_timeout=None,
-                 fit_timeout=None, faults=None, retry=None):
+                 fit_timeout=None, faults=None, retry=None,
+                 slo_path: str = ""):
     """Drive one campaign with optional ``--state`` fault tolerance and
     an optional ``--trace`` event log.  Returns (MCALResult | None,
     campaign) — result is None when ``iters_per_run`` preempted the loop
@@ -305,6 +318,12 @@ def run_campaign(task, service, cfg, *, state_path: str = "",
             metrics_store = TraceStore(metrics_path, campaign_id)
             metrics.attach_trace(metrics_store)
         camp.attach_metrics(metrics)
+
+    if slo_path:
+        # after attach_trace/attach_metrics: the health engine inherits
+        # whatever surfaces the campaign already observes with
+        from repro.obs import HealthEngine, SLOSpec
+        camp.attach_health(HealthEngine(SLOSpec.load(slo_path)))
 
     if faults is not None:
         # after attach_trace/attach_metrics: the injector mirrors its
@@ -481,7 +500,8 @@ def main():
                              autosave_path=args.autosave,
                              sweep_timeout=args.sweep_timeout,
                              fit_timeout=args.fit_timeout,
-                             faults=faults, retry=retry)
+                             faults=faults, retry=retry,
+                             slo_path=args.slo)
     if res is None:
         report = {"resumable": True, "state": args.state,
                   "iterations": len(camp.history),
@@ -513,6 +533,8 @@ def main():
     if faults is not None:
         report["chaos"] = {"faults_injected": faults.fired,
                            "sites_ticked": faults.counters()}
+    if args.slo and camp.health is not None:
+        report["health"] = camp.health.counts()
     if annotation is not None:
         report["annotation"] = {
             "votes": annotation.votes_bought,

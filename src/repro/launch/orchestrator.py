@@ -300,7 +300,9 @@ def build_fleet(features, groundtruth, specs, *, service,
                 annotation_service=None, engine_kw: Optional[Dict] = None,
                 task_kw: Optional[Dict] = None,
                 metrics=None, sweep_timeout: Optional[float] = None,
-                fit_timeout: Optional[float] = None) -> CampaignOrchestrator:
+                fit_timeout: Optional[float] = None,
+                health=None,
+                slo_enforce: bool = False) -> CampaignOrchestrator:
     """Wire a whole fleet: one :class:`SharedEngines` bundle, one
     :class:`~repro.core.task.LiveTask` + campaign +
     :class:`~repro.core.tenant.Tenant` per spec (per-tenant
@@ -313,7 +315,13 @@ def build_fleet(features, groundtruth, specs, *, service,
     the whole fleet (tenant attribution via the orchestrator's bound
     labels).  With a ``trace_dir`` its events stream into
     ``metrics.jsonl`` beside the tenant traces — observability kinds
-    only, so tenant decision streams still diff clean."""
+    only, so tenant decision streams still diff clean.
+
+    ``health`` is an optional ``repro.obs.HealthEngine``: the controller
+    ticks it at every rebalance boundary, its alert events ride the
+    FLEET trace (tenant decision streams untouched), and with
+    ``slo_enforce`` its enforceable SLO breach verdicts drive the
+    downgrade cascade."""
     import numpy as np
 
     from repro.core.mcal import MCALCampaign
@@ -363,7 +371,15 @@ def build_fleet(features, groundtruth, specs, *, service,
         metrics_trace = TraceStore(os.path.join(trace_dir, "metrics.jsonl"),
                                    "fleet-metrics")
         metrics.attach_trace(metrics_trace)
-    controller = FleetController(tenants, global_budget, fleet_trace)
+    if health is not None:
+        # fleet-level judgment rides the fleet trace (alert kinds are
+        # not FLEET_KINDS, so fleet traces still diff clean under them)
+        if health.trace is None and fleet_trace is not None:
+            health.attach_trace(fleet_trace)
+        if health.metrics is None and metrics is not None:
+            health.attach_metrics(metrics)
+    controller = FleetController(tenants, global_budget, fleet_trace,
+                                 health=health, slo_enforce=slo_enforce)
     return CampaignOrchestrator(tenants, controller, engines=engines,
                                 concurrent=concurrent, metrics=metrics,
                                 metrics_trace=metrics_trace)
@@ -462,6 +478,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "<trace-dir>/metrics.jsonl and a Prometheus "
                          "snapshot lands at <trace-dir>/metrics.prom "
                          "(render with launch.report --metrics)")
+    ap.add_argument("--slo", default="", metavar="SPEC.json",
+                    help="streaming health engine: judge every tenant "
+                         "against the declarative SLO spec (cost per "
+                         "committed label, iteration-latency p95, "
+                         "projected quality) at every rebalance "
+                         "boundary; hysteresis-gated alert events land "
+                         "in fleet.jsonl (render with launch.report "
+                         "--health)")
+    ap.add_argument("--slo-enforce", action="store_true",
+                    help="act on enforceable SLO breaches: breaching "
+                         "tenants walk the downgrade cascade (pause -> "
+                         "shrink_votes -> force_commit, one step per "
+                         "breached rebalance, deterministic walk order)")
     ap.add_argument("--sweep-timeout", type=float, default=None,
                     metavar="SECONDS",
                     help="straggler wall budget for async M(.) sweep "
@@ -518,6 +547,12 @@ def main():
     if args.metrics:
         from repro.obs import MetricsRegistry
         metrics = MetricsRegistry()
+    health = None
+    if args.slo:
+        from repro.obs import HealthEngine, SLOSpec
+        health = HealthEngine(SLOSpec.load(args.slo))
+    elif args.slo_enforce:
+        raise SystemExit("--slo-enforce requires --slo SPEC.json")
     orch = build_fleet(x, y, specs, service=service,
                        global_budget=args.global_budget,
                        trace_dir=args.trace_dir,
@@ -525,7 +560,8 @@ def main():
                        annotation_service=annotation,
                        metrics=metrics,
                        sweep_timeout=args.sweep_timeout,
-                       fit_timeout=args.fit_timeout)
+                       fit_timeout=args.fit_timeout,
+                       health=health, slo_enforce=args.slo_enforce)
     try:
         results = orch.run()
     finally:
@@ -544,6 +580,8 @@ def main():
                               if orch.engines else None),
         "trace_dir": args.trace_dir,
     }
+    if health is not None:
+        report["health"] = health.counts()
     print(json.dumps(report, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -15,7 +15,11 @@ The positional path may also be a fleet TRACE DIR (the orchestrator's
 ``metrics.jsonl`` when present.  ``--metrics`` adds the runtime panel
 (per-engine time breakdown, compile-cache hit rates, queue depths,
 burn rate vs throughput) from the ``metric_span``/``metric_snapshot``
-events — recorded telemetry only, nothing is recomputed.
+events — recorded telemetry only, nothing is recomputed.  ``--health``
+adds the judgment panel (active alerts, SLO breaches, recent
+``alert``/``alert_clear``/``slo_breach`` events; in a fleet dir the
+stream rides ``fleet.jsonl``) — combined with ``--watch`` it is a live
+alert panel.
 
 Everything here reads events only — no jax, no engines, no recompute
 (:func:`summarize` imports nothing heavier than the trace store and
@@ -30,6 +34,12 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.trace.store import TraceError, read_trace
+
+# rate denominators below this span (seconds) are noise, not signal: a
+# single-burst charge stream or a freshly-resumed trace re-emits its
+# events microseconds apart, and dividing by that would report an
+# absurd (or inf/NaN) burn rate instead of "no rate yet"
+MIN_RATE_SPAN = 1e-3
 
 
 def summarize(path: str) -> Dict:
@@ -121,8 +131,9 @@ def summarize(path: str) -> Dict:
         rspan = recent[-1].ts - recent[0].ts
         rspent = (recent[-1].payload["total"] - recent[0].payload["total"])
         out["burn"] = {
-            "per_second": spent / span if span > 0 else None,
-            "recent_per_second": rspent / rspan if rspan > 0 else None,
+            "per_second": spent / span if span > MIN_RATE_SPAN else None,
+            "recent_per_second": (rspent / rspan
+                                  if rspan > MIN_RATE_SPAN else None),
             "window_seconds": span}
     return out
 
@@ -154,13 +165,13 @@ def render(s: Dict) -> str:
             f"ledger: total ${led['total']:.2f}  (human ${led['human']:.2f}"
             f" / training ${led['training']:.2f}  "
             f"{led['human_labels']} labels, {led['human_votes']} votes)")
-    if s["burn"]:
+    if s["burn"] and s["burn"]["per_second"] is not None:
         b = s["burn"]
-        rate = b["recent_per_second"] or b["per_second"]
-        if rate is not None:
-            lines.append(f"burn rate: ${rate:.3f}/s (recent)  "
-                         f"${b['per_second']:.3f}/s overall over "
-                         f"{b['window_seconds']:.1f}s")
+        rate = b["recent_per_second"]
+        rate = b["per_second"] if rate is None else rate
+        lines.append(f"burn rate: ${rate:.3f}/s (recent)  "
+                     f"${b['per_second']:.3f}/s overall over "
+                     f"{b['window_seconds']:.1f}s")
     if s["annotator"]:
         first, last = s["annotator"][0], s["annotator"][-1]
         lines.append(
@@ -281,7 +292,7 @@ def render_metrics(ms: Dict, burn: Optional[Dict] = None) -> str:
     if ms["rows_swept"]:
         thr = (f"{ms['rows_swept']:.0f} rows swept"
                + (f" ({ms['rows_swept'] / sweep_s:,.0f} rows/s in sweeps)"
-                  if sweep_s > 0 else ""))
+                  if sweep_s > MIN_RATE_SPAN else ""))
         if ms["votes"]:
             thr += f", {ms['votes']:.0f} votes"
         rate = None
@@ -290,6 +301,72 @@ def render_metrics(ms: Dict, burn: Optional[Dict] = None) -> str:
         if rate is not None:
             thr += f"  @ ${rate:.3f}/s burn"
         lines.append("throughput: " + thr)
+    return "\n".join(lines)
+
+
+def summarize_health(paths: List[str]) -> Dict:
+    """Fold the health engine's judgment stream (``alert`` /
+    ``alert_clear`` / ``slo_breach`` events) from one or more traces
+    into the ``--health`` panel's data.
+
+    Replaying the hysteresis output is trivial because the engine
+    already deduplicated it: an ``alert``/``slo_breach`` event opens a
+    ``(tenant, detector)`` incident, the matching ``alert_clear``
+    closes it — whatever is still open at end-of-trace is the live
+    alert set."""
+    from repro.obs.health import ALERT_KINDS
+    events = []
+    for p in paths:
+        events.extend(e for e in read_trace(p) if e.kind in ALERT_KINDS)
+    events.sort(key=lambda e: e.ts)
+    active: Dict[Tuple[str, str], Dict] = {}
+    log: List[Dict] = []
+    raised = cleared = breaches = 0
+    for e in events:
+        p = e.payload
+        key = (str(p.get("tenant", "")), str(p.get("detector", "")))
+        row = {"ts": e.ts, "tick": p.get("tick"), "tenant": key[0],
+               "detector": key[1], "kind": e.kind,
+               "severity": p.get("severity", "warn")}
+        log.append(row)
+        if e.kind == "alert_clear":
+            cleared += 1
+            active.pop(key, None)
+        else:
+            raised += 1
+            if e.kind == "slo_breach":
+                breaches += 1
+            active[key] = row
+    return {
+        "alerts_raised": raised, "alerts_cleared": cleared,
+        "slo_breaches": breaches, "events": log,
+        "active": [active[k] for k in sorted(active)],
+    }
+
+
+def render_health(hs: Dict, tail: int = 8) -> str:
+    """The terminal view of one :func:`summarize_health` pass — the
+    live alert panel ``--watch --health`` re-renders."""
+    lines = ["", "== health =="]
+    if not hs["events"]:
+        lines.append("(no health events — engine not attached, "
+                     "or nothing to report)")
+        return "\n".join(lines)
+    lines.append(
+        f"{hs['alerts_raised']} raised / {hs['alerts_cleared']} cleared "
+        f"({hs['slo_breaches']} SLO breaches), "
+        f"{len(hs['active'])} active")
+    for a in hs["active"]:
+        who = a["tenant"] or "fleet"
+        lines.append(f"  ACTIVE [{a['severity']}] {who}: {a['detector']}"
+                     f"  (since tick {a['tick']})")
+    recent = hs["events"][-tail:]
+    lines.append(f"last {len(recent)} events:")
+    mark = {"alert": "!", "slo_breach": "x", "alert_clear": "-"}
+    for r in recent:
+        who = r["tenant"] or "fleet"
+        lines.append(f"  {mark.get(r['kind'], '?')} tick {r['tick']:>3}  "
+                     f"{who:<10} {r['detector']:<22} {r['kind']}")
     return "\n".join(lines)
 
 
@@ -315,6 +392,18 @@ def _trace_paths(path: str) -> Tuple[List[str], List[str]]:
     return [path], [path]
 
 
+def _health_paths(path: str) -> List[str]:
+    """Where ``--health`` reads alert events: a solo trace carries its
+    own judgment stream; in a fleet dir the health engine rides the
+    orchestrator's ``fleet.jsonl`` (tenant traces are still scanned —
+    a tenant may have attached its own engine solo-style)."""
+    if os.path.isdir(path):
+        names = sorted(os.listdir(path))
+        return [os.path.join(path, n) for n in names
+                if n.endswith(".jsonl") and n != "metrics.jsonl"]
+    return [path]
+
+
 def main(argv: Optional[List[str]] = None):
     ap = argparse.ArgumentParser(
         description="live view of an MCAL campaign trace")
@@ -332,6 +421,10 @@ def main(argv: Optional[List[str]] = None):
     ap.add_argument("--metrics-file", default=None, metavar="PATH",
                     help="read metric events from PATH instead of the "
                          "trace itself")
+    ap.add_argument("--health", action="store_true",
+                    help="append the health panel (active alerts, SLO "
+                         "breaches, recent judgment events) — with "
+                         "--watch this is a live alert panel")
     args = ap.parse_args(argv)
     while True:
         try:
@@ -340,6 +433,8 @@ def main(argv: Optional[List[str]] = None):
                 msources = [args.metrics_file]
             summaries = [summarize(p) for p in camps]
             ms = summarize_metrics(msources) if args.metrics else None
+            hs = (summarize_health(_health_paths(args.trace))
+                  if args.health else None)
         except (TraceError, OSError) as exc:
             # a watched trace can vanish mid-poll (rotation, the writer
             # re-creating its dir, a tenant not started yet) — in watch
@@ -357,6 +452,9 @@ def main(argv: Optional[List[str]] = None):
                 blob["metrics"] = {k: v for k, v in ms.items()
                                    if k != "snapshot"}
                 blob["metrics"]["snapshot"] = ms["snapshot"]
+            if hs is not None:
+                blob = dict(blob)
+                blob["health"] = hs
             print(json.dumps(blob, indent=2))
         else:
             for i, s in enumerate(summaries):
@@ -367,6 +465,8 @@ def main(argv: Optional[List[str]] = None):
                 burn = (summaries[0]["burn"]
                         if len(summaries) == 1 else None)
                 print(render_metrics(ms, burn))
+            if hs is not None:
+                print(render_health(hs))
         done = all(s["commit"] is not None for s in summaries)
         if not args.watch or done:
             return

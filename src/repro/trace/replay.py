@@ -55,6 +55,11 @@ OBSERVABILITY_KINDS = frozenset({
     # diffs CLEAN against its fault-free sibling (the bench_faults /
     # test_faults acceptance invariant)
     "fault_injected", "retry", "quarantine", "autosave",
+    # the health engine's judgment stream (repro.obs.health): raised /
+    # cleared alerts and SLO breach verdicts are observations ABOUT the
+    # decision stream, never part of it — a monitored campaign diffs
+    # clean against its monitor-off sibling
+    "alert", "alert_clear", "slo_breach",
 })
 
 ALL_KINDS = REPLAY_KINDS | OBSERVABILITY_KINDS
